@@ -1,0 +1,65 @@
+"""Paper Fig. 8: generator throughput (edges/s).
+
+Paths compared on this host: jnp vectorized sampler (jit), Pallas kernel in
+interpret mode (correctness path — interpret is slow by design), and the
+analytic v5e roofline of the two kernel variants (HBM-bits vs in-kernel
+PRNG) — the §Perf hillclimb numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, row
+from repro.core.rmat import sample_edges
+from repro.kernels import ops as kops
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def run(fast: bool = True):
+    n = m = 24
+    E = 1 << (18 if fast else 21)
+    L = max(n, m)
+    th = jnp.asarray(np.tile([0.45, 0.22, 0.2, 0.13], (L, 1)), jnp.float32)
+    rows = []
+
+    f = jax.jit(lambda k: sample_edges(k, th, n, m, E))
+    s, _ = f(jax.random.PRNGKey(0))
+    s.block_until_ready()
+    t0 = time.perf_counter()
+    s, d = f(jax.random.PRNGKey(1))
+    s.block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append(row("fig8/jnp_cpu", dt * 1e6, f"eps={E/dt:.3e}"))
+
+    E_k = 1 << 16
+    bits = jax.random.bits(jax.random.PRNGKey(0), (L, E_k), jnp.uint32)
+    t0 = time.perf_counter()
+    s, d = kops.rmat_edges_bits(th, bits, n=n, m=m, block=8192)
+    s.block_until_ready()
+    dt = time.perf_counter() - t0
+    rows.append(row("fig8/pallas_interpret", dt * 1e6,
+                    f"eps={E_k/dt:.3e} (interpret-mode correctness path)"))
+
+    # analytic v5e per-chip roofline for the two kernel variants
+    bytes_per_edge_bits = 4 * L + 8      # stream L uint32 + write 2×int32
+    bytes_per_edge_prng = 8              # write-only (bits live in VMEM)
+    eps_bits = HBM_BW / bytes_per_edge_bits
+    eps_prng_mem = HBM_BW / bytes_per_edge_prng
+    # PRNG variant becomes compute-bound: ~L·(threefry ~24 alu) per edge on
+    # the VPU; v5e VPU ~ 4 TOP/s int32 per chip (conservative)
+    eps_prng_alu = 4e12 / (L * 30)
+    rows.append(row("fig8/v5e_kernel_bits_roofline", 0.0,
+                    f"eps={eps_bits:.3e} (memory-bound, 4L+8 B/edge)"))
+    rows.append(row("fig8/v5e_kernel_prng_roofline", 0.0,
+                    f"eps={min(eps_prng_mem, eps_prng_alu):.3e} "
+                    f"(min of mem {eps_prng_mem:.2e}, alu {eps_prng_alu:.2e})"))
+    rows.append(row("fig8/v5e_pod_256chips_prng", 0.0,
+                    f"eps={256*min(eps_prng_mem, eps_prng_alu):.3e}"))
+    return emit(rows, "fig8_throughput")
+
+
+if __name__ == "__main__":
+    run()

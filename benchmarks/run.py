@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+prints ``name,us_per_call,derived`` CSV rows (and writes JSON under
+results/bench/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+TABLES = [
+    "table2_quality",
+    "fig2_distributions",
+    "table3_scaling",
+    "table5_scale_metrics",
+    "table6_ablation",
+    "table8_er_timings",
+    "table10_structural_stats",
+    "fig8_throughput",
+    "gnn_throughput",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for name in TABLES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(fast=not args.full)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 3: big-graph generation timings at increasing scale.
+
+CPU-scale absolute sizes (the container has one core) with edges/s as the
+derived metric, plus the v5e-projected step rate from the dry-run roofline
+(results/dryrun/graphgen__*.json) when available."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, row
+from repro.core.rmat import sample_graph_chunked
+from repro.core.structure import KroneckerFit
+
+
+def run(fast: bool = True):
+    rows = []
+    base_edges = 1 << (18 if fast else 21)
+    for scale in (1, 2, 4):
+        n = 16 + scale.bit_length()
+        fit = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=n, m=n,
+                           E=base_edges * scale ** 2)
+        t0 = time.perf_counter()
+        src, dst = sample_graph_chunked(jax.random.PRNGKey(0), fit, k_pref=2)
+        src.block_until_ready()
+        dt = time.perf_counter() - t0
+        eps = fit.E / dt
+        rows.append(row(f"table3/scale{scale}x", dt * 1e6,
+                        f"edges={fit.E};eps={eps:.3e}"))
+    # v5e projection from the dry-run, if the sweep has produced it
+    for mesh in ("single", "multi"):
+        p = f"results/dryrun/graphgen__1t__{mesh}.json"
+        if os.path.exists(p):
+            rec = json.load(open(p))
+            if rec.get("status") == "ok":
+                rl = rec["roofline"]
+                rows.append(row(f"table3/v5e_{mesh}_roofline", 0.0,
+                                f"edges_per_step={rl['edges']:.3e};"
+                                f"eps={rl['edges_per_s_roofline']:.3e}"))
+    return emit(rows, "table3_scaling")
+
+
+if __name__ == "__main__":
+    run()

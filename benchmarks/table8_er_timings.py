@@ -1,0 +1,30 @@
+"""Paper Table 8: Erdős–Rényi generation timings vs edge count."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, row
+from repro.core.rmat import sample_erdos_renyi
+
+
+def run(fast: bool = True):
+    rows = []
+    sizes = [1 << 18, 1 << 20, 1 << 22] if fast else [1 << 20, 1 << 23, 1 << 25]
+    for e in sizes:
+        fn = jax.jit(lambda k: sample_erdos_renyi(k, 1 << 20, 1 << 20, e),
+                     static_argnums=())
+        src, _ = fn(jax.random.PRNGKey(0))
+        src.block_until_ready()
+        t0 = time.perf_counter()
+        src, dst = fn(jax.random.PRNGKey(1))
+        src.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append(row(f"table8/er_{e}", dt * 1e6,
+                        f"edges={e};eps={e/dt:.3e}"))
+    return emit(rows, "table8_er_timings")
+
+
+if __name__ == "__main__":
+    run()

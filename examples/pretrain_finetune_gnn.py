@@ -1,0 +1,63 @@
+"""Paper §8.4: pre-train a GNN on a generated graph, fine-tune on the
+original — synthetic pre-training should not hurt (and usually helps) vs
+training from scratch.
+
+    PYTHONPATH=src python examples/pretrain_finetune_gnn.py
+"""
+import jax
+import numpy as np
+
+from repro.core.pipeline import SyntheticGraphPipeline
+from repro.data.reference import cora_like
+from repro.models.gnn import GNNConfig, train_node_classifier
+
+
+def main():
+    g, cont, cat = cora_like(n=1024, n_edges=6000)
+    labels = cat[:, 0]
+    cfg = GNNConfig(kind="gcn", n_classes=int(labels.max()) + 1)
+
+    # scratch baseline
+    _, acc_scratch = train_node_classifier(g, cont, labels, cfg, epochs=60)
+
+    # generate a synthetic twin (structure + node features + alignment)
+    pipe = SyntheticGraphPipeline(struct="kronecker", features="kde",
+                                  aligner="xgboost", feature_kind="node",
+                                  gan_steps=0)
+    pipe.fit(g, cont, cat)
+    gs, cs, ks = pipe.generate(seed=0)
+    syn_labels = ks[:, 0]
+
+    # pre-train on synthetic, then fine-tune on the original graph
+    params, acc_syn = train_node_classifier(gs, cs, syn_labels, cfg,
+                                            epochs=40)
+    # fine-tune: reuse weights via a fresh trainer seeded by params
+    from repro.models.gnn import make_node_classifier
+    import jax.numpy as jnp
+    train_step, predict = make_node_classifier(cfg, g)
+    rng = np.random.default_rng(0)
+    n = g.n_nodes
+    feats = jnp.asarray(cont, jnp.float32)
+    lab = jnp.asarray(labels, jnp.int32)
+    mask = np.zeros(n, np.float32)
+    idx = rng.permutation(n)
+    mask[idx[: int(n * 0.6)]] = 1.0
+    test_idx = idx[int(n * 0.6):]
+    opt = jax.tree.map(jnp.zeros_like, params)
+    mj = jnp.asarray(mask)
+    for _ in range(40):
+        params, opt, _ = train_step(params, opt, feats, lab, mj)
+    pred = np.asarray(predict(params, feats))
+    acc_ft = float((pred[test_idx] == labels[test_idx]).mean())
+
+    print(f"scratch accuracy:            {acc_scratch:.4f}")
+    print(f"synthetic-only accuracy:     {acc_syn:.4f}")
+    print(f"pretrain->finetune accuracy: {acc_ft:.4f}")
+    print("note: per-node alignment preserves degree<->label couplings but "
+          "not pairwise homophily (label-edge couplings) — the paper's own "
+          "§8.5 caveat: decoupled structure/feature generation limits tasks "
+          "whose signal is intrinsically pairwise.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end driver: pre-train a ~100M-param LM for a few hundred steps on
+a random-walk corpus sampled from a *generated* graph — the paper's
+synthetic-data-for-model-development use-case (§5, §8.4) wired into the LM
+training stack (checkpointing + resume included).
+
+    PYTHONPATH=src python examples/train_lm_on_graph_corpus.py \
+        --steps 300 --arch tinyllama-1.1b
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pipeline import SyntheticGraphPipeline
+from repro.data.pipeline import GraphWalkCorpus
+from repro.data.reference import paysim_like
+from repro.models import Model
+from repro.training.optimizer import OptConfig
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.utils import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # 1. generate a synthetic graph (the paper pipeline) ...
+    g, cont, cat = paysim_like(n=args.vocab, n_edges=6 * args.vocab)
+    pipe = SyntheticGraphPipeline(struct="kronecker", features="random",
+                                  aligner="random", gan_steps=0)
+    pipe.fit(g, cont, cat)
+    g_syn, _, _ = pipe.generate(seed=0)
+    print(f"generated graph: nodes={g_syn.n_nodes} edges={g_syn.n_edges}")
+
+    # 2. ... random-walk corpus over it ...
+    corpus = GraphWalkCorpus(g_syn, vocab=args.vocab)
+
+    # 3. ... ~100M-param model from the assigned-arch family, scaled down
+    cfg = get_config(args.arch).replace(
+        n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        head_dim=64, d_ff=4 * args.d_model, vocab=args.vocab, microbatches=1)
+    model = Model(cfg)
+    n_params = tree_size(model.abstract_params())
+    print(f"model: {args.arch}-derived, {n_params/1e6:.1f}M params")
+
+    hp = OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    tr = Trainer(model, hp,
+                 TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                               ckpt_dir=args.ckpt, log_every=25))
+    tr.fit(jax.random.PRNGKey(0), corpus.batches(args.batch, args.seq))
+    losses = [h["loss"] for h in tr.history]
+    print(f"loss: first10={np.mean(losses[:10]):.4f} "
+          f"last10={np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

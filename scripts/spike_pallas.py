@@ -1,0 +1,74 @@
+"""Spike 3: Pallas interpret-mode basics on CPU + pltpu prng availability."""
+import functools
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    HAS_PLTPU = True
+except Exception as e:  # pragma: no cover
+    HAS_PLTPU = False
+    print("no pltpu:", e)
+
+
+def add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+x = jnp.arange(1024, dtype=jnp.float32).reshape(8, 128)
+out = pl.pallas_call(
+    add_kernel,
+    out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+    interpret=True,
+)(x, x)
+print("basic pallas interpret OK:", out.sum())
+
+
+# grid + blockspec
+def blk_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+x = jnp.ones((1024, 256), jnp.float32)
+out = pl.pallas_call(
+    blk_kernel,
+    out_shape=jax.ShapeDtypeStruct((1024, 256), jnp.float32),
+    grid=(8,),
+    in_specs=[pl.BlockSpec((128, 256), lambda i: (i, 0))],
+    out_specs=pl.BlockSpec((128, 256), lambda i: (i, 0)),
+    interpret=True,
+)(x)
+print("grid blockspec OK:", out.sum())
+
+if HAS_PLTPU:
+    def prng_kernel(seed_ref, o_ref):
+        pltpu.prng_seed(seed_ref[0])
+        bits = pltpu.prng_random_bits(o_ref.shape)
+        o_ref[...] = bits
+
+    try:
+        seed = jnp.array([42], jnp.int32)
+        out = pl.pallas_call(
+            prng_kernel,
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.uint32),
+            interpret=True,
+        )(seed)
+        print("pltpu prng interpret OK:", out.dtype, int(out[0, 0]), int(out[1, 1]))
+    except Exception as e:
+        print("pltpu prng interpret FAILED:", type(e).__name__, str(e)[:300])
+
+    # fori_loop + dynamic store inside kernel
+    def loop_kernel(x_ref, o_ref):
+        def body(i, acc):
+            return acc + x_ref[i, :]
+        acc = jax.lax.fori_loop(0, x_ref.shape[0], body, jnp.zeros((128,), jnp.float32))
+        o_ref[0, :] = acc
+
+    x = jnp.ones((8, 128), jnp.float32)
+    out = pl.pallas_call(
+        loop_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 128), jnp.float32),
+        interpret=True,
+    )(x)
+    print("fori_loop kernel OK:", out.sum())

@@ -1,0 +1,194 @@
+"""Aligner (paper §3.4, App. 7): map generated feature rows onto generated
+structure so structure↔feature correlations of the original graph survive.
+
+Training: structural features per node (degree, PageRank, Katz — paper's
+set; §8.7 shows it beats node2vec) → per-column GBDT predictor ``R``
+(edge columns see ``[F_S(src), F_S(dst)]``, node columns ``F_S(v)``).
+
+Assignment: the paper ranks generated rows by similarity to the prediction
+(Eq. 17–19).  A global argmax assignment is O(E²); we use rank matching —
+both the predictions x̂ and the generated rows are scalarized by the same
+projection (first principal direction of x̂, standardized), sorted, and
+matched by rank, which is the optimal 1-D transport in the projected space
+and runs in O(E log E) (required at the paper's trillion-edge scale; the
+Eq. 18/19 similarity is used to *score* the match in tests).  Ties random,
+as in the paper.  ``RandomAligner`` is the ablation baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gbdt import GBDTClassifier, GBDTConfig, GBDTRegressor
+from repro.graph.ops import Graph, node_features
+from repro.tabular.schema import TableSchema
+
+
+@dataclasses.dataclass
+class AlignerConfig:
+    gbdt: GBDTConfig = dataclasses.field(
+        default_factory=lambda: GBDTConfig(n_rounds=100, max_depth=5, lr=0.1,
+                                           alpha=10.0))
+    max_cat_classes: int = 16     # one-vs-rest cap for categorical columns
+
+
+def _standardize(x, mu=None, sd=None):
+    mu = x.mean(0) if mu is None else mu
+    sd = x.std(0) + 1e-9 if sd is None else sd
+    return (x - mu) / sd, mu, sd
+
+
+class GBDTAligner:
+    """Per-column GBDT predictor + rank matching."""
+
+    def __init__(self, schema: TableSchema, cfg: AlignerConfig = AlignerConfig(),
+                 kind: str = "edge"):
+        assert kind in ("edge", "node")
+        self.schema = schema
+        self.cfg = cfg
+        self.kind = kind
+        self.cont_models: List[GBDTRegressor] = []
+        self.cat_models: List[Optional[GBDTClassifier]] = []
+
+    # -- feature extraction --------------------------------------------------
+    def _inputs(self, g: Graph) -> np.ndarray:
+        feats = np.asarray(node_features(g))
+        if self.kind == "node":
+            return feats[: g.n_src] if not g.bipartite else feats
+        src = np.asarray(g.src)
+        dst = np.asarray(g.dst) + (g.n_src if g.bipartite else 0)
+        return np.concatenate([feats[src], feats[dst]], axis=1)
+
+    # -- fit -------------------------------------------------------------------
+    def fit(self, g: Graph, cont: np.ndarray, cat: np.ndarray) -> "GBDTAligner":
+        X = self._inputs(g)
+        n = min(len(X), len(cont) if cont.size else len(X),
+                len(cat) if cat.size else len(X))
+        X = X[:n]
+        # 80/20 split: holdout quality scores drive the matching hierarchy
+        n_tr = max(1, int(n * 0.8))
+        self.col_quality: List[float] = []
+        self.cont_models = []
+        for j in range(self.schema.n_cont):
+            m = GBDTRegressor(self.cfg.gbdt).fit(X[:n_tr], cont[:n_tr, j])
+            self.cont_models.append(m)
+            y, p = cont[n_tr:n, j], m.predict_np(X[n_tr:n])
+            var = y.var() + 1e-12
+            self.col_quality.append(
+                float(max(0.0, 1.0 - ((p - y) ** 2).mean() / var)))
+        self.cat_models = []
+        for j, card in enumerate(self.schema.cat_cards):
+            if card <= self.cfg.max_cat_classes:
+                m = GBDTClassifier(card, self.cfg.gbdt).fit(X[:n_tr],
+                                                            cat[:n_tr, j])
+                self.cat_models.append(m)
+                y = cat[n_tr:n, j]
+                acc = float((m.predict_np(X[n_tr:n]) == y).mean())
+                base = max(np.bincount(y, minlength=card)) / max(len(y), 1)
+                self.col_quality.append(max(0.0, acc - float(base)))
+            else:
+                self.cat_models.append(None)  # too many classes: rank on cont
+        return self
+
+    # -- predict + rank match ----------------------------------------------
+    def predict(self, g: Graph) -> np.ndarray:
+        """x̂ per edge/node: concat of predicted cont cols + cat class ids."""
+        X = self._inputs(g)
+        cols = [m.predict_np(X) for m in self.cont_models]
+        for mdl in self.cat_models:
+            if mdl is not None:
+                cols.append(mdl.predict_np(X).astype(np.float32))
+        if not cols:
+            return np.zeros((len(X), 1), np.float32)
+        return np.stack(cols, 1)
+
+    def _match_keys(self, pred: np.ndarray, rows: np.ndarray,
+                    rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+        """Hierarchical rank keys: the holdout-best column is the primary
+        sort key (bucketed at √n resolution), the second-best breaks ties
+        within buckets.  Equal-count rank-bucketing keeps both sides
+        bijective.
+
+        Coupling calibration: plain rank matching makes the assigned
+        feature a *deterministic* (comonotone) function of the prediction,
+        which over-sharpens the structure↔feature joint (the real coupling
+        carries conditional noise — JS can land worse than independence).
+        The predictor's holdout R² tells us the true coupling strength:
+        ranking on ``predz + ε`` with ε ~ N(0, 1/R² − 1) makes
+        corr(match key, prediction) = √R², reproducing the observed
+        sharpness in closed form."""
+        n, d = pred.shape
+        order_cols = np.argsort(self.col_quality)[::-1]
+        prim = order_cols[0]
+        sec = order_cols[1] if d > 1 else prim
+        n_buckets = max(1, int(np.sqrt(n)))
+        r2 = float(np.clip(self.col_quality[prim], 0.05, 0.98))
+        s = np.sqrt(1.0 / r2 - 1.0)
+
+        def keys(mat, noise_s):
+            col = mat[:, prim]
+            sd = col.std() + 1e-9
+            key = col / sd + rng.normal(0, noise_s + 1e-9, n)
+            ranks = np.empty(n, np.int64)
+            ranks[np.argsort(key, kind="stable")] = np.arange(n)
+            bucket = ranks * n_buckets // n
+            return np.lexsort((mat[:, sec] + rng.normal(0, 1e-9, n), bucket))
+
+        return keys(pred, s), keys(rows, 0.0)
+
+    def align(self, g: Graph, cont_rows: np.ndarray, cat_rows: np.ndarray,
+              rng: Optional[np.random.Generator] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """Assign generated rows to edges (or nodes).  Returns the rows
+        permuted into edge/node order."""
+        rng = rng or np.random.default_rng(0)
+        pred = self.predict(g)
+        rows = self._rows_matrix(cont_rows, cat_rows)
+        n = min(len(pred), len(rows))
+        order_pred, order_rows = self._match_keys(pred[:n], rows[:n], rng)
+        perm = np.empty(n, np.int64)
+        perm[order_pred] = order_rows
+        return cont_rows[:n][perm], cat_rows[:n][perm]
+
+    def _rows_matrix(self, cont_rows, cat_rows):
+        cols = [cont_rows[:, j] for j in range(self.schema.n_cont)]
+        for j, mdl in enumerate(self.cat_models):
+            if mdl is not None:
+                cols.append(cat_rows[:, j].astype(np.float32))
+        if not cols:
+            return np.zeros((len(cont_rows), 1), np.float32)
+        return np.stack(cols, 1)
+
+    # -- similarity scores (Eq. 18/19) — used by tests/metrics ---------------
+    def similarity(self, pred: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        nc = self.schema.n_cont
+        s = -((pred[:, :nc] - rows[:, :nc]) ** 2).sum(1)
+        if pred.shape[1] > nc:
+            a, b = pred[:, nc:], rows[:, nc:]
+            denom = (np.linalg.norm(a, axis=1) * np.linalg.norm(b, axis=1)
+                     + 1e-9)
+            s = s + (a * b).sum(1) / denom
+        return s
+
+
+class RandomAligner:
+    """Ablation baseline: random permutation of generated rows."""
+
+    def __init__(self, schema: TableSchema, kind: str = "edge"):
+        self.schema = schema
+        self.kind = kind
+
+    def fit(self, g, cont, cat):
+        return self
+
+    def align(self, g: Graph, cont_rows, cat_rows, rng=None):
+        rng = rng or np.random.default_rng(0)
+        n = len(cont_rows)
+        perm = rng.permutation(n)
+        return cont_rows[perm], cat_rows[perm]
+
+
+ALIGNERS = {"xgboost": GBDTAligner, "gbdt": GBDTAligner,
+            "random": RandomAligner}

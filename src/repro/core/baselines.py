@@ -1,0 +1,134 @@
+"""Structural-generator baselines (paper §4.1 and Table 6).
+
+* ``ERGenerator`` — Erdős–Rényi ("random" in Table 2).
+* ``SBMGenerator`` — degree-corrected stochastic block model with a fitting
+  step, standing in for (improved) GraphWorld [30]: nodes are grouped into
+  degree-quantile blocks, the block-pair edge mass is estimated from the
+  input graph, and edges are sampled block-pair-first then
+  degree-proportionally within blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.ops import Graph, in_degrees, out_degrees
+
+
+class ERGenerator:
+    def fit(self, g: Graph) -> "ERGenerator":
+        self.n_src, self.n_dst = g.n_src, g.n_dst
+        self.E = g.n_edges
+        self.bipartite = g.bipartite
+        return self
+
+    def sample(self, rng: np.random.Generator, scale_nodes: int = 1,
+               scale_edges: Optional[int] = None) -> Graph:
+        se = scale_edges if scale_edges is not None else scale_nodes ** 2
+        src = rng.integers(0, self.n_src * scale_nodes, self.E * se)
+        dst = rng.integers(0, self.n_dst * scale_nodes, self.E * se)
+        return Graph(src.astype(np.int32), dst.astype(np.int32),
+                     self.n_src * scale_nodes, self.n_dst * scale_nodes,
+                     self.bipartite)
+
+
+@dataclasses.dataclass
+class SBMFit:
+    block_mass: np.ndarray      # (B, B) edge probability mass per block pair
+    src_blocks: np.ndarray      # (n_src,) block id
+    dst_blocks: np.ndarray
+    src_deg_w: np.ndarray       # within-block degree weights
+    dst_deg_w: np.ndarray
+
+
+class SBMGenerator:
+    """Degree-corrected SBM with degree-quantile blocks.
+
+    ``degree_mode``:
+
+    * ``"powerlaw"`` (default) — GraphWorld-faithful: within-block degree
+      weights are *sampled* from a per-block fitted Pareto (GraphWorld's
+      DC-SBM parameterizes the degree distribution; it never copies the
+      observed per-node degree list).
+    * ``"empirical"`` — per-node observed degrees as weights (an
+      intentionally *stronger-than-GraphWorld* baseline, close to a
+      block-constrained configuration model; reported separately).
+    """
+
+    def __init__(self, n_blocks: int = 8, degree_mode: str = "powerlaw",
+                 seed: int = 0):
+        self.B = n_blocks
+        self.degree_mode = degree_mode
+        self._rng = np.random.default_rng(seed)
+
+    def fit(self, g: Graph) -> "SBMGenerator":
+        self.n_src, self.n_dst, self.E = g.n_src, g.n_dst, g.n_edges
+        self.bipartite = g.bipartite
+        od = np.asarray(out_degrees(g), np.float64)
+        idg = np.asarray(in_degrees(g), np.float64)
+        self.src_blocks = self._quantile_blocks(od)
+        self.dst_blocks = self._quantile_blocks(idg)
+        src_b = self.src_blocks[np.asarray(g.src)]
+        dst_b = self.dst_blocks[np.asarray(g.dst)]
+        mass = np.zeros((self.B, self.B))
+        np.add.at(mass, (src_b, dst_b), 1.0)
+        if self.degree_mode == "powerlaw":
+            src_w = self._parametric_weights(od, self.src_blocks)
+            dst_w = self._parametric_weights(idg, self.dst_blocks)
+        else:
+            src_w, dst_w = od + 0.1, idg + 0.1
+        self.fitres = SBMFit(
+            block_mass=mass / max(mass.sum(), 1),
+            src_blocks=self.src_blocks, dst_blocks=self.dst_blocks,
+            src_deg_w=src_w, dst_deg_w=dst_w)
+        return self
+
+    def _parametric_weights(self, deg, blocks):
+        """Per block: fit a Pareto shape to mean degree, sample weights."""
+        w = np.zeros_like(deg)
+        for b in range(self.B):
+            sel = blocks == b
+            if not sel.any():
+                continue
+            mu = max(deg[sel].mean(), 0.1)
+            # Pareto with mean mu (shape 2.0 fixed, scale = mu/2)
+            w[sel] = self._rng.pareto(2.0, sel.sum()) * (mu / 2.0) + 0.05
+        return w
+
+    def _quantile_blocks(self, deg):
+        qs = np.quantile(deg, np.linspace(0, 1, self.B + 1)[1:-1])
+        return np.searchsorted(qs, deg).astype(np.int32)
+
+    def sample(self, rng: np.random.Generator, scale_nodes: int = 1,
+               scale_edges: Optional[int] = None) -> Graph:
+        se = scale_edges if scale_edges is not None else scale_nodes ** 2
+        E = self.E * se
+        f = self.fitres
+        # tile nodes for scaling; degree weights repeat
+        src_blocks = np.tile(f.src_blocks, scale_nodes)
+        dst_blocks = np.tile(f.dst_blocks, scale_nodes)
+        src_w = np.tile(f.src_deg_w, scale_nodes)
+        dst_w = np.tile(f.dst_deg_w, scale_nodes)
+        # per-block node lists + weights
+        pair_idx = rng.choice(self.B * self.B, size=E,
+                              p=f.block_mass.reshape(-1))
+        src_out = np.empty(E, np.int64)
+        dst_out = np.empty(E, np.int64)
+        for b in range(self.B):
+            nodes = np.where(src_blocks == b)[0]
+            w = src_w[nodes]
+            w = w / w.sum()
+            sel = pair_idx // self.B == b
+            if sel.any():
+                src_out[sel] = rng.choice(nodes, size=int(sel.sum()), p=w)
+            nodes_d = np.where(dst_blocks == b)[0]
+            wd = dst_w[nodes_d]
+            wd = wd / wd.sum()
+            sel_d = pair_idx % self.B == b
+            if sel_d.any():
+                dst_out[sel_d] = rng.choice(nodes_d, size=int(sel_d.sum()), p=wd)
+        return Graph(src_out.astype(np.int32), dst_out.astype(np.int32),
+                     self.n_src * scale_nodes, self.n_dst * scale_nodes,
+                     self.bipartite)

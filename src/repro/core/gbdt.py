@@ -1,0 +1,215 @@
+"""Histogram gradient-boosted trees — the aligner's predictor R.
+
+The paper uses (RAPIDS) XGBoost with lr=0.1, max_depth=5, 100 estimators,
+alpha=10.  There is no TPU XGBoost, so we keep the *model family and
+hyper-parameters* and swap the implementation (DESIGN.md §2): histogram
+trees fit in numpy (evaluation-scale), prediction vectorized in JAX
+(generation-scale: flat arrays + ``fori_loop`` descent, jit/shard-friendly).
+
+Squared loss; leaf values use XGBoost's L1(alpha)/L2(lambda) shrinkage:
+``w = -sign(G)·max(|G|-α, 0) / (H + λ)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GBDTConfig:
+    n_rounds: int = 100
+    max_depth: int = 5
+    lr: float = 0.1
+    n_bins: int = 32
+    alpha: float = 10.0       # L1 on leaf weights (paper's setting)
+    lam: float = 1.0          # L2
+    min_child: int = 4
+
+
+class _Tree:
+    """Dense complete-binary-tree arrays (size 2^(depth+1)-1)."""
+
+    def __init__(self, depth: int):
+        size = 2 ** (depth + 1) - 1
+        self.feature = np.zeros(size, np.int32)
+        self.threshold = np.zeros(size, np.float32)
+        self.leaf = np.zeros(size, np.float32)
+        self.is_leaf = np.ones(size, bool)
+
+
+def _leaf_value(G, H, cfg):
+    g = -G
+    w = np.sign(g) * np.maximum(np.abs(g) - cfg.alpha, 0) / (H + cfg.lam)
+    return w
+
+
+def _fit_tree(X, grad, cfg: GBDTConfig, bins) -> _Tree:
+    n, f = X.shape
+    tree = _Tree(cfg.max_depth)
+    node_of = np.zeros(n, np.int32)  # current node per sample
+    # binned features once
+    Xb = np.empty((n, f), np.int32)
+    for j in range(f):
+        Xb[:, j] = np.searchsorted(bins[j], X[:, j], side="right")
+
+    for depth in range(cfg.max_depth):
+        level = range(2 ** depth - 1, 2 ** (depth + 1) - 1)
+        for node in level:
+            mask = node_of == node
+            cnt = int(mask.sum())
+            if cnt < 2 * cfg.min_child:
+                continue
+            g = grad[mask]
+            xb = Xb[mask]
+            G, H = g.sum(), float(cnt)
+            base = _gain(G, H, cfg)
+            best = (0.0, -1, -1)
+            for j in range(f):
+                hist_g = np.bincount(xb[:, j], weights=g,
+                                     minlength=cfg.n_bins + 1)
+                hist_n = np.bincount(xb[:, j], minlength=cfg.n_bins + 1)
+                cg = np.cumsum(hist_g)[:-1]
+                cn = np.cumsum(hist_n)[:-1]
+                ok = (cn >= cfg.min_child) & (H - cn >= cfg.min_child)
+                if not ok.any():
+                    continue
+                gain = (_gain(cg, cn, cfg) + _gain(G - cg, H - cn, cfg) - base)
+                gain = np.where(ok, gain, -np.inf)
+                b = int(np.argmax(gain))
+                if gain[b] > best[0]:
+                    best = (float(gain[b]), j, b)
+            if best[1] >= 0:
+                j, b = best[1], best[2]
+                tree.is_leaf[node] = False
+                tree.feature[node] = j
+                thr = bins[j][b] if b < len(bins[j]) else np.inf
+                tree.threshold[node] = thr
+                go_right = X[mask, j] > thr
+                idx = np.where(mask)[0]
+                node_of[idx[go_right]] = 2 * node + 2
+                node_of[idx[~go_right]] = 2 * node + 1
+
+    # leaf values for every node a sample can stop at
+    for node in range(len(tree.is_leaf)):
+        mask = node_of == node
+        if mask.any():
+            tree.leaf[node] = _leaf_value(grad[mask].sum(), float(mask.sum()),
+                                          cfg)
+    return tree
+
+
+def _gain(G, H, cfg):
+    g1 = np.maximum(np.abs(G) - cfg.alpha, 0.0)
+    return 0.5 * g1 * g1 / (H + cfg.lam)
+
+
+class GBDTRegressor:
+    def __init__(self, cfg: GBDTConfig = GBDTConfig()):
+        self.cfg = cfg
+        self.base = 0.0
+        self.trees: List[_Tree] = []
+        self._packed = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBDTRegressor":
+        cfg = self.cfg
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        self.base = float(y.mean()) if y.size else 0.0
+        pred = np.full_like(y, self.base)
+        self.bins = [np.quantile(X[:, j], np.linspace(0, 1, cfg.n_bins + 1)[1:-1])
+                     for j in range(X.shape[1])]
+        self.bins = [np.unique(b) for b in self.bins]
+        for _ in range(cfg.n_rounds):
+            grad = pred - y                       # squared loss
+            tree = _fit_tree(X, grad, cfg, self.bins)
+            self.trees.append(tree)
+            pred += cfg.lr * _predict_tree_np(tree, X)
+        self._pack()
+        return self
+
+    def _pack(self):
+        self._packed = {
+            "feature": jnp.asarray(np.stack([t.feature for t in self.trees])),
+            "threshold": jnp.asarray(np.stack([t.threshold for t in self.trees])),
+            "leaf": jnp.asarray(np.stack([t.leaf for t in self.trees])),
+            "is_leaf": jnp.asarray(np.stack([t.is_leaf for t in self.trees])),
+        }
+
+    def predict(self, X) -> jnp.ndarray:
+        """Vectorized JAX prediction (jit-able, shard-friendly)."""
+        pk = self._packed
+        X = jnp.asarray(X, jnp.float32)
+        T = pk["feature"].shape[0]
+
+        def one_tree(carry, t):
+            feat, thr, leaf, isl = t
+            idx = jnp.zeros(X.shape[0], jnp.int32)
+            val = jnp.zeros(X.shape[0], jnp.float32)
+            done = jnp.zeros(X.shape[0], bool)
+
+            def step(_, state):
+                idx, val, done = state
+                f = feat[idx]
+                leaf_here = isl[idx]
+                newly = leaf_here & ~done
+                val = jnp.where(newly, leaf[idx], val)
+                done = done | leaf_here
+                go_right = jnp.take_along_axis(
+                    X, f[:, None], axis=1)[:, 0] > thr[idx]
+                idx = jnp.where(done, idx,
+                                jnp.where(go_right, 2 * idx + 2, 2 * idx + 1))
+                return idx, val, done
+
+            idx, val, done = jax.lax.fori_loop(
+                0, self.cfg.max_depth + 1, step, (idx, val, done))
+            return carry + self.cfg.lr * val, None
+
+        total, _ = jax.lax.scan(
+            one_tree, jnp.full(X.shape[0], self.base, jnp.float32),
+            (pk["feature"], pk["threshold"], pk["leaf"], pk["is_leaf"]))
+        return total
+
+    def predict_np(self, X) -> np.ndarray:
+        pred = np.full(len(X), self.base, np.float32)
+        for t in self.trees:
+            pred += self.cfg.lr * _predict_tree_np(t, np.asarray(X, np.float32))
+        return pred
+
+
+def _predict_tree_np(tree: _Tree, X: np.ndarray) -> np.ndarray:
+    idx = np.zeros(len(X), np.int32)
+    for _ in range(16):
+        leafy = tree.is_leaf[idx]
+        if leafy.all():
+            break
+        f = tree.feature[idx]
+        thr = tree.threshold[idx]
+        go_right = X[np.arange(len(X)), f] > thr
+        idx = np.where(leafy, idx, np.where(go_right, 2 * idx + 2, 2 * idx + 1))
+    return tree.leaf[idx]
+
+
+class GBDTClassifier:
+    """One-vs-rest stack of regressors on one-hot targets; softmax combine."""
+
+    def __init__(self, n_classes: int, cfg: GBDTConfig = GBDTConfig()):
+        self.n_classes = n_classes
+        self.models = [GBDTRegressor(cfg) for _ in range(n_classes)]
+
+    def fit(self, X, y):
+        onehot = np.eye(self.n_classes, dtype=np.float32)[np.asarray(y, np.int64)]
+        for k, m in enumerate(self.models):
+            m.fit(X, onehot[:, k])
+        return self
+
+    def predict_proba_np(self, X) -> np.ndarray:
+        scores = np.stack([m.predict_np(X) for m in self.models], 1)
+        e = np.exp(scores - scores.max(1, keepdims=True))
+        return e / e.sum(1, keepdims=True)
+
+    def predict_np(self, X) -> np.ndarray:
+        return self.predict_proba_np(X).argmax(1).astype(np.int32)

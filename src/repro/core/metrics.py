@@ -1,0 +1,209 @@
+"""Evaluation metrics (paper §4.3, §8.12).
+
+* ``degree_dist_similarity`` — normalized-degree-distribution agreement in
+  [0, 1] (higher better; the paper's "Degree Dist. ↑").  Log-binned so it is
+  well-defined when G̃ is much larger than G.
+* ``dcc`` — the paper's Eq. 20/21 scalar (relative log-binned histogram
+  error; we also expose 1-DCC as similarity).
+* ``feature_correlation_score`` — mean agreement of the pairwise column
+  association matrices: Pearson (cont–cont), correlation ratio (cat–cont),
+  Theil's U (cat–cat), matching the paper's "Feature Corr. ↑".
+* ``degree_feature_distance`` — JS divergence between the joint
+  (degree-bin × feature-bin) histograms ("Degree-Feat Dist-Dist ↓").
+* ``hop_plot`` / effective diameter live in ``repro.graph.ops``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.ops import Graph, in_degrees, out_degrees
+
+
+# ---------------------------------------------------------------------------
+# Degree distribution
+# ---------------------------------------------------------------------------
+
+def _normalized_log_hist(degrees: np.ndarray, n_bins: int = 24) -> np.ndarray:
+    """Histogram of degree/max_degree over log-spaced bins, normalized to a
+    distribution (size-invariant — comparable across graph scales)."""
+    d = np.asarray(degrees, np.float64)
+    d = d[d > 0]
+    if d.size == 0:
+        return np.zeros(n_bins)
+    x = d / d.max()
+    edges = np.logspace(-6, 0, n_bins + 1)
+    h, _ = np.histogram(x, bins=edges)
+    h = h.astype(np.float64)
+    return h / max(h.sum(), 1)
+
+
+def degree_dist_similarity(g_real: Graph, g_syn: Graph,
+                           n_bins: int = 24) -> float:
+    """1 − total-variation distance between normalized degree histograms,
+    averaged over in/out; in [0, 1]."""
+    sims = []
+    for deg_fn in (out_degrees, in_degrees):
+        h1 = _normalized_log_hist(np.asarray(deg_fn(g_real)), n_bins)
+        h2 = _normalized_log_hist(np.asarray(deg_fn(g_syn)), n_bins)
+        sims.append(1.0 - 0.5 * np.abs(h1 - h2).sum())
+    return float(np.mean(sims))
+
+
+def dcc(g_real: Graph, g_syn: Graph, n_points: int = 16) -> float:
+    """Paper Eq. 20: mean relative error of the normalized degree
+    distribution at log-spaced normalized degrees.  0 = identical."""
+    errs = []
+    for deg_fn in (out_degrees, in_degrees):
+        d1 = np.asarray(deg_fn(g_real), np.float64)
+        d2 = np.asarray(deg_fn(g_syn), np.float64)
+        if d1.max() == 0 or d2.max() == 0:
+            continue
+        ks = np.logspace(-3, 0, n_points)
+
+        def curve(d):
+            x = d[d > 0] / d.max()
+            c, _ = np.histogram(x, bins=np.concatenate([[0], ks]))
+            c = np.cumsum(c[::-1])[::-1].astype(np.float64)  # CCDF-ish
+            return c / max(c.max(), 1)
+
+        c1, c2 = curve(d1), curve(d2)
+        ok = c1 > 0
+        if ok.any():
+            errs.append(np.mean(np.abs(c1[ok] - c2[ok]) / c1[ok]))
+    return float(np.mean(errs)) if errs else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Feature correlation (Pearson / correlation ratio / Theil's U)
+# ---------------------------------------------------------------------------
+
+def pearson_matrix(cont: np.ndarray) -> np.ndarray:
+    if cont.shape[1] < 2:
+        return np.ones((cont.shape[1], cont.shape[1]))
+    return np.corrcoef(cont.T)
+
+
+def correlation_ratio(cat: np.ndarray, cont: np.ndarray) -> float:
+    """η: sqrt(SS_between / SS_total) for one cat vs one cont column."""
+    total_var = cont.var() * len(cont)
+    if total_var <= 0:
+        return 0.0
+    ss_between = 0.0
+    for c in np.unique(cat):
+        grp = cont[cat == c]
+        ss_between += len(grp) * (grp.mean() - cont.mean()) ** 2
+    return float(np.sqrt(ss_between / total_var))
+
+
+def theils_u(x: np.ndarray, y: np.ndarray) -> float:
+    """U(x|y) = (H(x) − H(x|y)) / H(x) ∈ [0,1]."""
+    def entropy(v):
+        _, c = np.unique(v, return_counts=True)
+        p = c / c.sum()
+        return -(p * np.log(p + 1e-12)).sum()
+
+    hx = entropy(x)
+    if hx <= 0:
+        return 1.0
+    # conditional entropy H(x|y)
+    hxy = 0.0
+    for vy in np.unique(y):
+        sel = y == vy
+        hxy += sel.mean() * entropy(x[sel])
+    return float((hx - hxy) / hx)
+
+
+def association_matrix(cont: np.ndarray, cat: np.ndarray) -> np.ndarray:
+    """Full mixed-type column association matrix."""
+    nc, nd = cont.shape[1], cat.shape[1]
+    n = nc + nd
+    m = np.eye(n)
+    pear = pearson_matrix(cont)
+    m[:nc, :nc] = np.nan_to_num(pear)
+    for i in range(nd):
+        for j in range(nc):
+            r = correlation_ratio(cat[:, i], cont[:, j])
+            m[nc + i, j] = m[j, nc + i] = r
+        for j in range(nd):
+            if i != j:
+                m[nc + i, nc + j] = theils_u(cat[:, i], cat[:, j])
+    return m
+
+
+def feature_correlation_score(cont_r, cat_r, cont_s, cat_s) -> float:
+    """Similarity of association matrices over the *off-diagonal* entries
+    (the diagonal is identically 1 and would inflate every method)."""
+    mr = association_matrix(cont_r, cat_r)
+    ms = association_matrix(cont_s, cat_s)
+    n = mr.shape[0]
+    if n <= 1:
+        return 1.0
+    off = ~np.eye(n, dtype=bool)
+    return float(1.0 - np.abs(mr[off] - ms[off]).mean())
+
+
+# ---------------------------------------------------------------------------
+# Joint degree × feature distribution (JS)
+# ---------------------------------------------------------------------------
+
+def _joint_hist(g: Graph, feat: np.ndarray, deg_bins=16, feat_bins=16,
+                feat_edges=None, side: str = "src"):
+    if side == "src":
+        deg = np.asarray(out_degrees(g), np.float64)
+        ids = np.asarray(g.src)
+    else:
+        deg = np.asarray(in_degrees(g), np.float64)
+        ids = np.asarray(g.dst)
+    d_edge = deg[ids] / max(deg.max(), 1)      # normalized degree (scale-free)
+    f = np.asarray(feat, np.float64).reshape(-1)[: len(d_edge)]
+    d_edge = d_edge[: len(f)]
+    de = np.logspace(-4, 0, deg_bins + 1)
+    de[0] = 0.0
+    if feat_edges is None:
+        feat_edges = np.quantile(f, np.linspace(0, 1, feat_bins + 1))
+        feat_edges = np.unique(feat_edges)
+        if len(feat_edges) < 3:
+            feat_edges = np.linspace(f.min(), f.max() + 1e-6, feat_bins + 1)
+    h, _, _ = np.histogram2d(d_edge, f, bins=(de, feat_edges))
+    h = h / max(h.sum(), 1)
+    return h, feat_edges
+
+
+def js_divergence(p: np.ndarray, q: np.ndarray) -> float:
+    p = p.reshape(-1) + 1e-12
+    q = q.reshape(-1) + 1e-12
+    p, q = p / p.sum(), q / q.sum()
+    m = 0.5 * (p + q)
+    kl = lambda a, b: (a * np.log(a / b)).sum()
+    return float(0.5 * kl(p, m) + 0.5 * kl(q, m))
+
+
+def degree_feature_distance(g_real: Graph, feat_real: np.ndarray,
+                            g_syn: Graph, feat_syn: np.ndarray) -> float:
+    """JS divergence of the joint (degree × first-feature) histograms,
+    averaged over the src- and dst-degree views (paper "Degree-Feat
+    Dist-Dist ↓") — structure↔feature couplings can live on either side of
+    a bipartite edge.  Degree axes are normalized per graph so different
+    scales remain comparable."""
+    total = 0.0
+    for side in ("src", "dst"):
+        hr, fe = _joint_hist(g_real, feat_real, side=side)
+        hs, _ = _joint_hist(g_syn, feat_syn, feat_edges=fe, side=side)
+        n = min(hr.shape[0], hs.shape[0])
+        total += js_divergence(hr[:n], hs[:n])
+    return total / 2.0
+
+
+def evaluate_all(g_real: Graph, cont_r, cat_r, g_syn: Graph, cont_s, cat_s
+                 ) -> Dict[str, float]:
+    feat_r = cont_r[:, 0] if cont_r.size else cat_r[:, 0].astype(np.float64)
+    feat_s = cont_s[:, 0] if cont_s.size else cat_s[:, 0].astype(np.float64)
+    return {
+        "degree_dist": degree_dist_similarity(g_real, g_syn),
+        "dcc": dcc(g_real, g_syn),
+        "feature_corr": feature_correlation_score(cont_r, cat_r, cont_s, cat_s),
+        "degree_feat_dist": degree_feature_distance(
+            g_real, feat_r, g_syn, feat_s),
+    }

@@ -1,0 +1,153 @@
+"""Edge sampling for the generalized stochastic Kronecker generator.
+
+``sample_edges`` is the vectorized JAX reference path (one uniform per edge
+per level, predicated bit-pushes — the same algorithm the Pallas kernel in
+``repro.kernels.rmat_sample`` tiles into VMEM).  ``chunk_plan`` +
+``sample_chunk`` implement the paper's App. 10 chunked generation: θ is
+split ``θ_pref ⊗ θ_gen``; prefix sampling is replaced by its expectation
+``E_i = E · P(prefix = i)`` so chunks are id-disjoint, deterministic in
+count, and embarrassingly parallel (each chunk only needs its own PRNG key).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.structure import KroneckerFit, noisy_thetas
+
+
+def _level_bits(u, th):
+    """u: (E,) uniforms; th: (4,) [a,b,c,d] -> (src_bit, dst_bit) int32."""
+    a, b, c = th[0], th[1], th[2]
+    src_bit = (u >= a + b).astype(jnp.int32)
+    dst_bit = (((u >= a) & (u < a + b)) | (u >= a + b + c)).astype(jnp.int32)
+    return src_bit, dst_bit
+
+
+def sample_edges(key, thetas, n: int, m: int, n_edges: int,
+                 dtype=jnp.int32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample ``n_edges`` edges of a 2^n × 2^m adjacency.
+
+    thetas: (max(n,m), 4) per-level (a,b,c,d) — rows beyond min(n,m) use
+    only their marginals (p = a+b row-zero prob, q = a+c col-zero prob).
+    """
+    lv_sq = min(n, m)
+    L = max(n, m)
+    keys = jax.random.split(key, L)
+    src = jnp.zeros((n_edges,), dtype)
+    dst = jnp.zeros((n_edges,), dtype)
+    for ell in range(L):
+        u = jax.random.uniform(keys[ell], (n_edges,), jnp.float32)
+        th = thetas[ell]
+        if ell < lv_sq:
+            sb, db = _level_bits(u, th)
+            src = src * 2 + sb.astype(dtype)
+            dst = dst * 2 + db.astype(dtype)
+        elif n > m:                       # extra row levels: θ_V = [p; 1-p]
+            p = th[0] + th[1]
+            src = src * 2 + (u >= p).astype(dtype)
+        else:                             # extra col levels: θ_H = [q, 1-q]
+            q = th[0] + th[2]
+            dst = dst * 2 + (u >= q).astype(dtype)
+    return src, dst
+
+
+def sample_graph(key, fit: KroneckerFit, n_edges: Optional[int] = None,
+                 rng: Optional[np.random.Generator] = None,
+                 dtype=jnp.int32):
+    """One-shot (unchunked) generation from a fit."""
+    rng = rng or np.random.default_rng(0)
+    thetas = jnp.asarray(noisy_thetas(fit, rng), jnp.float32)
+    E = n_edges if n_edges is not None else fit.E
+    return sample_edges(key, thetas, fit.n, fit.m, E, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked generation (paper App. 10)
+# ---------------------------------------------------------------------------
+
+class Chunk(NamedTuple):
+    src_prefix: int
+    dst_prefix: int
+    n_edges: int
+    index: int
+
+
+def chunk_plan(fit: KroneckerFit, k_pref: int,
+               thetas: Optional[np.ndarray] = None) -> List[Chunk]:
+    """Enumerate the 4^k_pref prefix chunks with expected edge counts.
+
+    Uses the first ``k_pref`` (square) levels of θ; expected counts are
+    rounded with largest-remainder so they sum exactly to E.
+    """
+    assert k_pref <= min(fit.n, fit.m), (k_pref, fit.n, fit.m)
+    if thetas is None:
+        thetas = np.tile(np.array([fit.a, fit.b, fit.c, fit.d]),
+                         (max(fit.n, fit.m), 1))
+    probs = np.ones(1)
+    for ell in range(k_pref):
+        probs = np.kron(probs, thetas[ell])
+    # quadrant index sequence -> (src_prefix, dst_prefix)
+    raw = probs * fit.E
+    base = np.floor(raw).astype(np.int64)
+    rem = fit.E - base.sum()
+    order = np.argsort(raw - base)[::-1]
+    base[order[:rem]] += 1
+    chunks = []
+    for idx in range(4 ** k_pref):
+        sp = dp = 0
+        for ell in range(k_pref):
+            quad = (idx >> (2 * (k_pref - 1 - ell))) & 3
+            sp = sp * 2 + (quad >> 1)
+            dp = dp * 2 + (quad & 1)
+        if base[idx] > 0:
+            chunks.append(Chunk(sp, dp, int(base[idx]), idx))
+    return chunks
+
+
+def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
+                 thetas=None, rng: Optional[np.random.Generator] = None,
+                 dtype=jnp.int32):
+    """Sample one chunk: suffix levels from θ_gen, prefix bits prepended.
+    Guaranteed id-disjoint across chunks (distinct prefixes)."""
+    rng = rng or np.random.default_rng(0)
+    if thetas is None:
+        thetas = noisy_thetas(fit, rng)
+    suffix = jnp.asarray(thetas[k_pref:], jnp.float32)
+    n_s, m_s = fit.n - k_pref, fit.m - k_pref
+    src, dst = sample_edges(key, suffix, n_s, m_s, chunk.n_edges, dtype)
+    src = src + (chunk.src_prefix << n_s)
+    dst = dst + (chunk.dst_prefix << m_s)
+    return src, dst
+
+
+def sample_graph_chunked(key, fit: KroneckerFit, k_pref: int = 2,
+                         rng: Optional[np.random.Generator] = None,
+                         dtype=jnp.int32):
+    """Full graph via chunk concatenation (memory-bounded generation)."""
+    rng = rng or np.random.default_rng(0)
+    thetas = noisy_thetas(fit, rng)
+    chunks = chunk_plan(fit, k_pref, thetas)
+    keys = jax.random.split(key, len(chunks))
+    srcs, dsts = [], []
+    for ck, k in zip(chunks, keys):
+        s, d = sample_chunk(k, fit, ck, k_pref, thetas, rng, dtype)
+        srcs.append(s)
+        dsts.append(d)
+    return jnp.concatenate(srcs), jnp.concatenate(dsts)
+
+
+# ---------------------------------------------------------------------------
+# Erdős–Rényi baseline (paper §4.1 'random')
+# ---------------------------------------------------------------------------
+
+def sample_erdos_renyi(key, n_src: int, n_dst: int, n_edges: int,
+                       dtype=jnp.int32):
+    k1, k2 = jax.random.split(key)
+    src = jax.random.randint(k1, (n_edges,), 0, n_src, dtype)
+    dst = jax.random.randint(k2, (n_edges,), 0, n_dst, dtype)
+    return src, dst

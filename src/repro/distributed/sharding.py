@@ -1,0 +1,193 @@
+"""Logical-axis sharding resolution with divisibility fallback.
+
+The production mesh is fixed by the assignment —
+``(16, 16) ("data", "model")`` single-pod / ``(2, 16, 16) ("pod", "data",
+"model")`` multi-pod — while the ten assigned architectures have head counts,
+KV widths and vocab sizes that do not all divide 16.  Rather than hand-tuning
+per arch, every parameter/activation dim carries a *logical* name and this
+module resolves logical → mesh axes per model:
+
+* each logical name has an ordered candidate list of mesh axes;
+* a candidate is taken only if the dim size is divisible by the (product of
+  the) mesh axes and no axis is already used by another dim of the same
+  tensor;
+* otherwise the next candidate (or replication) is used.
+
+Attention gets a per-model *plan* (see :func:`attention_plan`): shard KV heads
+when they divide the TP axis, else shard Q heads and replicate KV, else shard
+head_dim (contraction-sharded attention — compiles, costs an extra
+all-reduce; surfaced in the roofline analysis, e.g. llama4's 40 heads).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCand = Union[str, Tuple[str, ...]]
+
+_ctx = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    _ctx.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+class active_mesh:
+    """Context manager: set both the repro mesh and the jax mesh context."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        set_mesh(self.mesh)
+        self._cm = self.mesh
+        self._cm.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(None)
+        return self._cm.__exit__(*exc)
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+def _mesh_axis_size(mesh: Mesh, cand: AxisCand) -> int:
+    if isinstance(cand, str):
+        return mesh.shape[cand] if cand in mesh.shape else 0
+    size = 1
+    for a in cand:
+        if a not in mesh.shape:
+            return 0
+        size *= mesh.shape[a]
+    return size
+
+
+def attention_plan(n_heads: int, n_kv: int, head_dim: int, tp: int) -> str:
+    """'kv' | 'heads' | 'head_dim' | 'replicate' — see module docstring."""
+    if n_kv % tp == 0:
+        return "kv"
+    if n_heads % tp == 0:
+        return "heads"
+    if head_dim % tp == 0:
+        return "head_dim"
+    return "replicate"
+
+
+def make_rules(cfg, mesh: Mesh) -> Dict[str, Tuple[AxisCand, ...]]:
+    """Logical-dim → ordered mesh-axis candidates, specialized per model."""
+    tp = mesh.shape.get("model", 1)
+    plan = attention_plan(cfg.n_heads, cfg.n_kv_heads or cfg.n_heads,
+                          cfg.resolved_head_dim, tp)
+    rules: Dict[str, Tuple[AxisCand, ...]] = {
+        "layers": (),
+        "experts": (),          # scanned over in the TP MoE path
+        "embed": (),
+        "embed_out": ("model",),
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "batch": (("pod", "data"), "data"),
+        "seq": (),
+        "kv_seq": (),           # cache sequence dim (see below)
+        "conv": (),
+        "lora": (),
+        "groups": (),
+        "ssm_state": (),
+        "frames": (),
+        "patches": (),
+        "patch_dim": (),
+    }
+    if plan == "kv":
+        rules.update(heads=("model",), kv_heads=("model",), head_dim=())
+    elif plan == "heads":
+        # KV heads indivisible: replicate K/V weights, but shard the KV
+        # *cache* along its sequence dim over 'model' (flash-decoding-style
+        # sequence-parallel decode; XLA inserts the softmax-stat psum).
+        rules.update(heads=("model",), kv_heads=(), head_dim=(),
+                     kv_seq=("model",))
+    elif plan == "head_dim":
+        rules.update(heads=(), kv_heads=(), head_dim=("model",))
+    else:
+        rules.update(heads=(), kv_heads=(), head_dim=(), kv_seq=("model",))
+    if getattr(cfg, "seq_shard", False):
+        rules["seq"] = ("model",)
+    if getattr(cfg, "dp2d", False):
+        rules["batch"] = (("pod", "data", "model"), ("data", "model"),
+                          ("pod", "data"), "data")
+    if getattr(cfg, "moe_path", "tp") == "ep":
+        # expert parallelism: each model-rank owns E/tp full-width experts
+        rules["experts"] = ("model",)
+        rules["mlp"] = ()
+    if getattr(cfg, "fsdp", False):
+        # ZeRO-3: weight embed dims additionally sharded over data.
+        # Activation tensors list 'batch' first, which claims 'data' before
+        # 'embed' can (uniqueness), so activations stay batch-sharded.
+        rules["embed"] = ("data",)
+    return rules
+
+
+def resolve_spec(dims: Sequence[Optional[str]], shape: Sequence[int],
+                 rules: Dict[str, Tuple[AxisCand, ...]], mesh: Mesh) -> P:
+    """Assign mesh axes to dims honoring divisibility + axis uniqueness."""
+    used = set()
+    out = []
+    for dim, size in zip(dims, shape):
+        assigned = None
+        for cand in rules.get(dim, ()) if dim else ():
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a in used for a in axes):
+                continue
+            asize = _mesh_axis_size(mesh, cand)
+            if asize == 0 or size % asize != 0:
+                continue
+            assigned = cand if isinstance(cand, str) else tuple(cand)
+            used.update(axes)
+            break
+        out.append(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(dims_tree, shape_tree, rules, mesh: Mesh):
+    """NamedSharding tree from logical-dims + shapes trees."""
+    def one(dims, shaped):
+        return NamedSharding(mesh, resolve_spec(dims, shaped.shape, rules, mesh))
+    return jax.tree.map(one, dims_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(d, (str, type(None))) for d in x))
+
+
+def constrain(x, dims: Sequence[Optional[str]], cfg=None):
+    """Best-effort sharding constraint (no-op without mesh+rules context —
+    an empty-rules constraint would force replication, which is worse than
+    letting SPMD propagate)."""
+    mesh = get_mesh()
+    rules = getattr(_ctx, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = resolve_spec(dims, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def set_rules(rules):
+    _ctx.rules = rules
+
+
+class activation_rules:
+    def __init__(self, rules):
+        self.rules = rules
+
+    def __enter__(self):
+        set_rules(self.rules)
+
+    def __exit__(self, *exc):
+        set_rules(None)

@@ -1,0 +1,278 @@
+"""Graph substrate: COO edge-list operations (JAX-first, numpy for small
+exact statistics used in evaluation).
+
+A graph is ``(src, dst, n_src, n_dst)`` — int32 arrays; homogeneous graphs
+use ``n_src == n_dst``.  All heavy ops (degrees, PageRank, Katz) are
+``segment_sum``-based and jit/shard-friendly so they run on generated graphs
+at scale; the exact triangle/assortativity statistics (paper Table 10) are
+numpy and intended for evaluation-sized graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Graph:
+    src: jnp.ndarray          # (E,) int32
+    dst: jnp.ndarray          # (E,) int32
+    n_src: int
+    n_dst: int
+    bipartite: bool = False   # True: src/dst are distinct partites
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_src + self.n_dst if self.bipartite else self.n_src
+
+
+def out_degrees(g: Graph) -> jnp.ndarray:
+    return jnp.bincount(g.src, length=g.n_src)
+
+
+def in_degrees(g: Graph) -> jnp.ndarray:
+    return jnp.bincount(g.dst, length=g.n_dst)
+
+
+def degree_histogram(degrees, max_deg: Optional[int] = None) -> jnp.ndarray:
+    """c_k = #nodes with degree k (k=0..max_deg)."""
+    if max_deg is None:
+        max_deg = int(jnp.max(degrees)) if degrees.size else 0
+    return jnp.bincount(jnp.clip(degrees, 0, max_deg), length=max_deg + 1)
+
+
+def dedup_edges(src, dst, n_dst: int):
+    """Remove duplicate (src,dst) pairs (numpy; used when exactness needed)."""
+    key = np.asarray(src, np.int64) * n_dst + np.asarray(dst, np.int64)
+    _, idx = np.unique(key, return_index=True)
+    return np.asarray(src)[idx], np.asarray(dst)[idx]
+
+
+# ---------------------------------------------------------------------------
+# Spectral / centrality features (aligner inputs) — jit-able
+# ---------------------------------------------------------------------------
+
+def pagerank(g: Graph, n_iter: int = 20, damping: float = 0.85) -> jnp.ndarray:
+    """PageRank over the (possibly bipartite, treated as directed) graph.
+    Returns (n_src + n_dst) scores for bipartite, (n) otherwise."""
+    if g.bipartite:
+        n = g.n_src + g.n_dst
+        src = g.src
+        dst = g.dst + g.n_src
+        # reverse edges too so both partites receive mass
+        src = jnp.concatenate([src, dst])
+        dst = jnp.concatenate([dst, src[: g.src.shape[0]]])
+    else:
+        n, src, dst = g.n_src, g.src, g.dst
+    deg = jnp.bincount(src, length=n).astype(jnp.float32)
+    inv = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1), 0.0)
+
+    def body(_, r):
+        contrib = r * inv
+        r_new = jax.ops.segment_sum(contrib[src], dst, num_segments=n)
+        dangling = jnp.sum(jnp.where(deg == 0, r, 0.0))
+        return (1 - damping) / n + damping * (r_new + dangling / n)
+
+    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    return jax.lax.fori_loop(0, n_iter, body, r0)
+
+
+def katz_centrality(g: Graph, alpha: float = 0.05, n_iter: int = 15) -> jnp.ndarray:
+    if g.bipartite:
+        n = g.n_src + g.n_dst
+        src = jnp.concatenate([g.src, g.dst + g.n_src])
+        dst = jnp.concatenate([g.dst + g.n_src, g.src])
+    else:
+        n, src, dst = g.n_src, g.src, g.dst
+
+    def body(_, x):
+        ax = jax.ops.segment_sum(x[src], dst, num_segments=n)
+        return 1.0 + alpha * ax
+
+    x = jnp.ones((n,), jnp.float32)
+    return jax.lax.fori_loop(0, n_iter, body, x)
+
+
+def node_features(g: Graph, n_pr_iter: int = 20) -> jnp.ndarray:
+    """Structural features per node: [out_deg, in_deg, pagerank, katz].
+    Bipartite graphs return (n_src + n_dst, 4) with degree in the matching
+    role and zero in the other."""
+    pr = pagerank(g, n_pr_iter)
+    kz = katz_centrality(g)
+    if g.bipartite:
+        od = jnp.concatenate([out_degrees(g), jnp.zeros(g.n_dst, jnp.int32)])
+        idg = jnp.concatenate([jnp.zeros(g.n_src, jnp.int32), in_degrees(g)])
+    else:
+        od, idg = out_degrees(g), in_degrees(g)
+    return jnp.stack([od.astype(jnp.float32), idg.astype(jnp.float32),
+                      pr * pr.shape[0], jnp.log1p(kz)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Hop-plot (effective diameter) via sampled BFS frontier expansion
+# ---------------------------------------------------------------------------
+
+def hop_plot(g: Graph, n_sources: int = 32, max_hops: int = 16,
+             seed: int = 0) -> np.ndarray:
+    """d(h): mean fraction of node pairs reachable within h hops (sampled)."""
+    n = g.n_nodes
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst) + (g.n_src if g.bipartite else 0)
+    # undirected adjacency
+    heads = np.concatenate([src, dst])
+    tails = np.concatenate([dst, src])
+    order = np.argsort(heads, kind="stable")
+    heads, tails = heads[order], tails[order]
+    starts = np.searchsorted(heads, np.arange(n + 1))
+    rng = np.random.default_rng(seed)
+    sources = rng.choice(n, size=min(n_sources, n), replace=False)
+    reach = np.zeros(max_hops + 1)
+    for s in sources:
+        seen = np.zeros(n, bool)
+        seen[s] = True
+        frontier = np.array([s])
+        reach[0] += 1
+        for h in range(1, max_hops + 1):
+            nxt = []
+            for u in frontier:
+                nbr = tails[starts[u]: starts[u + 1]]
+                nbr = nbr[~seen[nbr]]
+                if nbr.size:
+                    seen[nbr] = True
+                    nxt.append(np.unique(nbr))
+            if not nxt:
+                reach[h:] += seen.sum()
+                break
+            frontier = np.concatenate(nxt)
+            reach[h] += seen.sum()
+        else:
+            pass
+    return reach / (len(sources) * n)
+
+
+def effective_diameter(hp: np.ndarray, frac: float = 0.9) -> float:
+    """Interpolated hop count reaching `frac` of the final reachable mass."""
+    total = hp[-1]
+    if total <= 0:
+        return float("inf")
+    target = frac * total
+    for h in range(len(hp)):
+        if hp[h] >= target:
+            if h == 0:
+                return 0.0
+            lo, hi = hp[h - 1], hp[h]
+            return h - 1 + (target - lo) / max(hi - lo, 1e-12)
+    return float(len(hp))
+
+
+# ---------------------------------------------------------------------------
+# Exact small-graph statistics (paper Table 10 analog; numpy)
+# ---------------------------------------------------------------------------
+
+def _to_undirected_numpy(g: Graph):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst) + (g.n_src if g.bipartite else 0)
+    e = np.stack([np.minimum(src, dst), np.maximum(src, dst)], 1)
+    e = np.unique(e, axis=0)
+    e = e[e[:, 0] != e[:, 1]]
+    return e, g.n_nodes
+
+
+def triangle_count(g: Graph) -> int:
+    e, n = _to_undirected_numpy(g)
+    adj = [[] for _ in range(n)]
+    deg = np.zeros(n, np.int64)
+    for u, v in e:
+        deg[u] += 1
+        deg[v] += 1
+    # orient edges low-degree -> high-degree for O(E^1.5)
+    rank = np.argsort(np.argsort(deg, kind="stable"), kind="stable")
+    tri = 0
+    nbrs = [set() for _ in range(n)]
+    for u, v in e:
+        a, b = (u, v) if (deg[u], rank[u]) < (deg[v], rank[v]) else (v, u)
+        nbrs[a].add(b)
+    for u, v in e:
+        a, b = (u, v) if (deg[u], rank[u]) < (deg[v], rank[v]) else (v, u)
+        tri += len(nbrs[a] & nbrs[b])
+    return int(tri)
+
+
+def wedge_count(g: Graph) -> int:
+    e, n = _to_undirected_numpy(g)
+    deg = np.bincount(e.reshape(-1), minlength=n)
+    return int(np.sum(deg * (deg - 1) // 2))
+
+
+def global_clustering(g: Graph) -> float:
+    w = wedge_count(g)
+    return 3.0 * triangle_count(g) / w if w else 0.0
+
+
+def degree_assortativity(g: Graph) -> float:
+    e, n = _to_undirected_numpy(g)
+    deg = np.bincount(e.reshape(-1), minlength=n).astype(np.float64)
+    x, y = deg[e[:, 0]], deg[e[:, 1]]
+    x = np.concatenate([x, y])
+    y = np.concatenate([y, deg[e[:, 0]]])
+    if x.std() < 1e-12:
+        return 0.0
+    return float(np.corrcoef(x, y)[0, 1])
+
+
+def gini_coefficient(degrees) -> float:
+    d = np.sort(np.asarray(degrees, np.float64))
+    n = d.size
+    if n == 0 or d.sum() == 0:
+        return 0.0
+    cum = np.cumsum(d)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
+
+
+def powerlaw_exponent(degrees, dmin: int = 1) -> float:
+    """MLE alpha for P(d) ∝ d^-alpha over d >= dmin (Clauset et al.)."""
+    d = np.asarray(degrees, np.float64)
+    d = d[d >= dmin]
+    if d.size == 0:
+        return float("nan")
+    return float(1.0 + d.size / np.sum(np.log(d / (dmin - 0.5))))
+
+
+def rel_edge_distribution_entropy(g: Graph) -> float:
+    """Entropy of the degree distribution relative to uniform (Table 10)."""
+    deg = np.asarray(out_degrees(g), np.float64)
+    if g.bipartite:
+        deg = np.concatenate([deg, np.asarray(in_degrees(g), np.float64)])
+    p = deg / max(deg.sum(), 1)
+    p = p[p > 0]
+    n = p.size
+    if n <= 1:
+        return 1.0
+    return float(-(p * np.log(p)).sum() / np.log(n))
+
+
+def largest_connected_component(g: Graph) -> int:
+    e, n = _to_undirected_numpy(g)
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in e:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[ru] = rv
+    roots = np.array([find(i) for i in range(n)])
+    _, counts = np.unique(roots, return_counts=True)
+    return int(counts.max()) if counts.size else 0

@@ -1,0 +1,51 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels execute via ``interpret=True``;
+on TPU set ``interpret=False`` (and prefer ``rmat_sample_prng`` which keeps
+PRNG bits in VMEM).  ``backend_interpret()`` picks automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import rmat_sample as rs
+
+
+def backend_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block", "interpret"))
+def rmat_edges(thetas, uniforms, *, n: int, m: int,
+               block: int = rs.DEFAULT_BLOCK, interpret: bool = True):
+    return rs.rmat_sample_uniforms(thetas, uniforms, n, m, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m", "block", "interpret"))
+def rmat_edges_bits(thetas, bits, *, n: int, m: int,
+                    block: int = rs.DEFAULT_BLOCK, interpret: bool = True):
+    return rs.rmat_sample_bits(thetas, bits, n, m, block, interpret)
+
+
+def rmat_edges_from_key(key, thetas, *, n: int, m: int, n_edges: int,
+                        block: int = rs.DEFAULT_BLOCK,
+                        interpret: bool | None = None):
+    """Convenience: threefry bits on-device -> kernel (bits variant)."""
+    interpret = backend_interpret() if interpret is None else interpret
+    L = max(n, m)
+    bits = jax.random.bits(key, (L, n_edges), jnp.uint32)
+    return rmat_edges_bits(thetas, bits, n=n, m=m, block=block,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "blk_q", "blk_k", "group",
+                                    "interpret"))
+def attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
+              blk_k: int = 128, group: int = 1, interpret: bool = True):
+    return fa.flash_attention(q, k, v, causal=causal, blk_q=blk_q,
+                              blk_k=blk_k, group=group, interpret=interpret)

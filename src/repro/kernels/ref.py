@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmat_ref(thetas, uniforms, n: int, m: int):
+    """Oracle for rmat_sample_*: identical math, plain jnp."""
+    L, E = uniforms.shape
+    lv_sq = min(n, m)
+    src = jnp.zeros((E,), jnp.int32)
+    dst = jnp.zeros((E,), jnp.int32)
+    for ell in range(max(n, m)):
+        u = uniforms[ell]
+        a, b, c = thetas[ell, 0], thetas[ell, 1], thetas[ell, 2]
+        if ell < lv_sq:
+            sb = (u >= a + b).astype(jnp.int32)
+            db = (((u >= a) & (u < a + b)) | (u >= a + b + c)).astype(jnp.int32)
+            src = src * 2 + sb
+            dst = dst * 2 + db
+        elif n > m:
+            src = src * 2 + (u >= a + b).astype(jnp.int32)
+        else:
+            dst = dst * 2 + (u >= a + c).astype(jnp.int32)
+    return src, dst
+
+
+def bits_to_uniform_ref(bits):
+    mant = jnp.right_shift(bits, jnp.uint32(9))
+    one = jnp.uint32(0x3F800000)
+    f = jax.lax.bitcast_convert_type(jnp.bitwise_or(mant, one), jnp.float32)
+    return f - 1.0
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None, group: int = 1):
+    """Oracle for flash_attention.  q: (Hq,S,d), k/v: (Hkv,T,d)."""
+    Hq, S, d = q.shape
+    Hkv, T, _ = k.shape
+    scale = (1.0 / d ** 0.5) if sm_scale is None else sm_scale
+    kk = jnp.repeat(k, Hq // Hkv, axis=0)
+    vv = jnp.repeat(v, Hq // Hkv, axis=0)
+    s = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, vv.astype(jnp.float32)).astype(q.dtype)

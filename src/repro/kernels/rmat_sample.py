@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: stochastic-Kronecker (R-MAT) edge sampling.
+
+This is the paper's performance hot spot (Fig. 8: their CUDA sampler beats
+TrillionG/FastSGG by >10×).  TPU-native adaptation (DESIGN.md §2): edges are
+tiled into VMEM blocks; the per-level bit decision is a vectorized
+predicated add over 8×128 lanes — no gathers, no divergence.  Uniform
+layout is ``(L, BLK)`` so each level reads one contiguous VMEM row.
+
+Three variants share the same decision logic (``_descend``):
+
+* ``rmat_kernel_uniforms``   — uniforms streamed from HBM (memory-bound
+  baseline: 4·L bytes/edge).  Validated in interpret mode vs ``ref.py``.
+* ``rmat_kernel_bits``       — raw uint32 bits from HBM, converted in-VMEM
+  (validates the bit→uniform conversion used by the PRNG variant).
+* ``rmat_kernel_prng``       — TPU-only: ``pltpu.prng_random_bits``
+  generates bits in VMEM (§Perf optimized variant: HBM traffic drops ~L×
+  to the 8-byte edge output).  ``pltpu.prng_*`` has no CPU interpret rule,
+  so this variant is compile-gated to TPU; its post-bits logic is exactly
+  ``rmat_kernel_bits``'s.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu only needed for the PRNG variant
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+DEFAULT_BLOCK = 8192
+
+
+def _bits_to_uniform(bits):
+    """uint32 -> U[0,1) float32 via mantissa trick (TPU-friendly, no div)."""
+    mant = jnp.right_shift(bits, jnp.uint32(9))
+    one = jnp.uint32(0x3F800000)
+    f = jax.lax.bitcast_convert_type(jnp.bitwise_or(mant, one), jnp.float32)
+    return f - 1.0
+
+
+def _descend(get_u, theta_ref, n: int, m: int, block: int):
+    """Shared level loop: consume one uniform row per level, push bits."""
+    lv_sq = min(n, m)
+    src = jnp.zeros((block,), jnp.int32)
+    dst = jnp.zeros((block,), jnp.int32)
+    for ell in range(max(n, m)):
+        u = get_u(ell)
+        a = theta_ref[ell, 0]
+        b = theta_ref[ell, 1]
+        c = theta_ref[ell, 2]
+        if ell < lv_sq:
+            sb = (u >= a + b).astype(jnp.int32)
+            db = jnp.logical_or(jnp.logical_and(u >= a, u < a + b),
+                                u >= a + b + c).astype(jnp.int32)
+            src = src * 2 + sb
+            dst = dst * 2 + db
+        elif n > m:
+            src = src * 2 + (u >= a + b).astype(jnp.int32)
+        else:
+            dst = dst * 2 + (u >= a + c).astype(jnp.int32)
+    return src, dst
+
+
+def _kernel_uniforms(theta_ref, u_ref, src_ref, dst_ref, *, n, m, block):
+    src, dst = _descend(lambda ell: u_ref[ell, :], theta_ref, n, m, block)
+    src_ref[:] = src
+    dst_ref[:] = dst
+
+
+def _kernel_bits(theta_ref, bits_ref, src_ref, dst_ref, *, n, m, block):
+    src, dst = _descend(lambda ell: _bits_to_uniform(bits_ref[ell, :]),
+                        theta_ref, n, m, block)
+    src_ref[:] = src
+    dst_ref[:] = dst
+
+
+def _kernel_prng(seed_ref, theta_ref, src_ref, dst_ref, *, n, m, block):
+    """TPU-only: per-block seed fold-in, bits generated in VMEM."""
+    pid = pl.program_id(0)
+    pltpu.prng_seed(seed_ref[0] + pid)
+    L = max(n, m)
+    bits = pltpu.prng_random_bits((L, block))
+
+    src, dst = _descend(lambda ell: _bits_to_uniform(bits[ell, :]),
+                        theta_ref, n, m, block)
+    src_ref[:] = src
+    dst_ref[:] = dst
+
+
+def rmat_sample_uniforms(thetas, uniforms, n: int, m: int,
+                         block: int = DEFAULT_BLOCK, interpret: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """thetas: (L,4) f32; uniforms: (L, E) f32.  E % block == 0."""
+    L, E = uniforms.shape
+    assert E % block == 0, (E, block)
+    grid = (E // block,)
+    kern = functools.partial(_kernel_uniforms, n=n, m=m, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+            pl.BlockSpec((L, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((E,), jnp.int32),
+                   jax.ShapeDtypeStruct((E,), jnp.int32)],
+        interpret=interpret,
+    )(thetas, uniforms)
+
+
+def rmat_sample_bits(thetas, bits, n: int, m: int,
+                     block: int = DEFAULT_BLOCK, interpret: bool = True
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """thetas: (L,4) f32; bits: (L, E) uint32."""
+    L, E = bits.shape
+    assert E % block == 0, (E, block)
+    kern = functools.partial(_kernel_bits, n=n, m=m, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(E // block,),
+        in_specs=[
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+            pl.BlockSpec((L, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((E,), jnp.int32),
+                   jax.ShapeDtypeStruct((E,), jnp.int32)],
+        interpret=interpret,
+    )(thetas, bits)
+
+
+def rmat_sample_prng(seed, thetas, n: int, m: int, n_edges: int,
+                     block: int = DEFAULT_BLOCK
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """TPU-only fast path (no HBM uniform traffic).  seed: (1,) int32."""
+    assert pltpu is not None, "requires TPU pallas"
+    L = max(n, m)
+    assert n_edges % block == 0
+    kern = functools.partial(_kernel_prng, n=n, m=m, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(n_edges // block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((L, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_edges,), jnp.int32)],
+        interpret=False,
+    )(seed, thetas)

@@ -1,0 +1,195 @@
+"""Encoder–decoder stack (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``(B, F, d_model)`` (``input_specs`` supplies
+them), passes them through a learned projection and a bidirectional
+transformer encoder.  The decoder is a causal transformer with
+cross-attention into the encoder output.
+
+Decode caches: decoder self-attention K/V (written per step) plus the
+cross-attention K/V (computed once at prefill from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import (attention_defs, cross_entropy, embed_defs,
+                                 head_defs, logits_from, multihead_attention,
+                                 rms_norm, swiglu, swiglu_defs)
+from repro.models.params import ParamDef
+from repro.models.transformer import ForwardOut, _maybe_remat
+
+
+def encdec_defs(cfg) -> Dict[str, Any]:
+    Le = cfg.encdec.n_encoder_layers
+    Ld = cfg.n_layers
+    return {
+        "embed": embed_defs(cfg),
+        "frame_proj": ParamDef((cfg.d_model, cfg.d_model), ("frames", "embed")),
+        "encoder": {
+            "ln1": ParamDef((Le, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln2": ParamDef((Le, cfg.d_model), ("layers", "embed"), init="ones"),
+            "attn": attention_defs(cfg, n_layers=Le),
+            "mlp": swiglu_defs(cfg, n_layers=Le),
+        },
+        "ln_enc": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "decoder": {
+            "ln1": ParamDef((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln_x": ParamDef((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "ln2": ParamDef((Ld, cfg.d_model), ("layers", "embed"), init="ones"),
+            "attn": attention_defs(cfg, n_layers=Ld),
+            "xattn": attention_defs(cfg, n_layers=Ld),
+            "mlp": swiglu_defs(cfg, n_layers=Ld),
+        },
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "head": head_defs(cfg),
+    }
+
+
+def encdec_cache_spec(cfg, batch: int, max_dec: int, n_frames: int):
+    dt = jnp.dtype(cfg.dtype)
+    KV, Hd, Ld = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    S = jax.ShapeDtypeStruct
+    return {"k": S((Ld, batch, max_dec, KV, Hd), dt),
+            "v": S((Ld, batch, max_dec, KV, Hd), dt),
+            "xk": S((Ld, batch, n_frames, KV, Hd), dt),
+            "xv": S((Ld, batch, n_frames, KV, Hd), dt),
+            "pos": S((), jnp.int32)}
+
+
+def init_encdec_cache(cfg, batch, max_dec, n_frames):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        encdec_cache_spec(cfg, batch, max_dec, n_frames))
+
+
+def encode(params, frames, cfg):
+    """frames: (B, F, d_model) stub embeddings -> encoder memory (B, F, D)."""
+    x = jnp.einsum("bfd,de->bfe", frames.astype(jnp.dtype(cfg.dtype)),
+                   params["frame_proj"])
+    x = constrain(x, ("batch", "seq", "embed"))
+    B, F, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def body(x, w):
+        h = rms_norm(x, w["ln1"], cfg.norm_eps)
+        x = x + multihead_attention(w["attn"], h, cfg=cfg, positions=positions,
+                                    causal=False)
+        h = rms_norm(x, w["ln2"], cfg.norm_eps)
+        x = constrain(x + swiglu(w["mlp"], h), ("batch", "seq", "embed"))
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["encoder"])
+    else:
+        from repro.models.transformer import layer_params
+        for i in range(cfg.encdec.n_encoder_layers):
+            w = layer_params(params["encoder"], i)
+            x, _ = body(x, w)
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder_block(w, x, cfg, positions, memory, self_kv=None, cross_kv=None,
+                   cache_pos=None):
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    if self_kv is not None:
+        a, self_kv = multihead_attention(w["attn"], h, cfg=cfg,
+                                         positions=positions,
+                                         kv_cache=self_kv, cache_pos=cache_pos)
+    else:
+        a = multihead_attention(w["attn"], h, cfg=cfg, positions=positions)
+    x = x + a
+    h = rms_norm(x, w["ln_x"], cfg.norm_eps)
+    if memory is not None:
+        # prefill/training: keys from memory
+        a = multihead_attention(w["xattn"], h, cfg=cfg, positions=positions,
+                                causal=False, memory=memory)
+        if cross_kv is not None:
+            # also write cross K/V for later decode
+            k = jnp.einsum("btd,dkh->btkh", memory, w["xattn"]["wk"])
+            v = jnp.einsum("btd,dkh->btkh", memory, w["xattn"]["wv"])
+            cross_kv = (k.astype(cross_kv[0].dtype), v.astype(cross_kv[1].dtype))
+    else:
+        # decode: cross K/V from cache
+        xk, xv = cross_kv
+        B, S, D = h.shape
+        H, KV, Hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dhk->bshk", h, w["xattn"]["wq"]).reshape(
+            B, S, KV, H // KV, Hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", q, xk,
+                            preferred_element_type=jnp.float32) / jnp.sqrt(Hd)
+        probs = jax.nn.softmax(scores, -1).astype(xv.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", probs, xv).reshape(B, S, H, Hd)
+        a = jnp.einsum("bshk,hkd->bsd", o, w["xattn"]["wo"])
+    x = x + a
+    h = rms_norm(x, w["ln2"], cfg.norm_eps)
+    x = constrain(x + swiglu(w["mlp"], h), ("batch", "seq", "embed"))
+    return x, self_kv, cross_kv
+
+
+def forward(params, batch, cfg, cache=None, mesh=None) -> ForwardOut:
+    """batch: {'frames': (B,F,D) | None (decode), 'tokens': (B,S)}."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    start = cache["pos"] if cache is not None else 0
+    positions = batch.get("positions")
+    if positions is None:
+        positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    memory = None
+    if batch.get("frames") is not None:
+        memory = encode(params, batch["frames"], cfg)
+
+    if cfg.scan_layers:
+        def body(x, xs):
+            if cache is not None:
+                w, ck, cv, xk, xv = xs
+                x, skv, xkv = _decoder_block(w, x, cfg, positions, memory,
+                                             (ck, cv), (xk, xv), cache["pos"])
+                return x, (skv[0], skv[1], xkv[0], xkv[1])
+            (w,) = xs
+            x, _, _ = _decoder_block(w, x, cfg, positions, memory)
+            return x, None
+
+        body = _maybe_remat(body, cfg)
+        if cache is not None:
+            xs = (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"])
+            x, ys = jax.lax.scan(body, x, xs)
+            cache = dict(cache, k=ys[0], v=ys[1], xk=ys[2], xv=ys[3],
+                         pos=cache["pos"] + S)
+        else:
+            x, _ = jax.lax.scan(body, x, (params["decoder"],))
+    else:
+        from repro.models.transformer import layer_params
+        new = {"k": [], "v": [], "xk": [], "xv": []}
+        for i in range(cfg.n_layers):
+            w = layer_params(params["decoder"], i)
+            skv = ((cache["k"][i], cache["v"][i]) if cache is not None else None)
+            xkv = ((cache["xk"][i], cache["xv"][i]) if cache is not None else None)
+            x, skv, xkv = _decoder_block(w, x, cfg, positions, memory, skv, xkv,
+                                         cache["pos"] if cache is not None else None)
+            if skv is not None:
+                for kk, vv in zip(("k", "v", "xk", "xv"),
+                                  (skv[0], skv[1], xkv[0], xkv[1])):
+                    new[kk].append(vv)
+        if cache is not None:
+            cache = dict(cache, pos=cache["pos"] + S,
+                         **{k: jnp.stack(v) for k, v in new.items()})
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from(params, x, cfg)
+    return ForwardOut(logits, 0.0, cache)
+
+
+def lm_loss(params, batch, cfg, mesh=None):
+    out = forward(params, batch, cfg, mesh=mesh)
+    return cross_entropy(out.logits[:, :-1], batch["labels"][:, 1:],
+                         batch.get("loss_mask"))

@@ -1,0 +1,267 @@
+"""Shared transformer building blocks (pure JAX, shard-friendly).
+
+Attention uses the *grouped einsum* formulation — queries reshaped to
+``(B, S, KV, G, Hd)`` so GQA never materializes ``jnp.repeat``-ed K/V (which
+triggers SPMD involuntary rematerialization on TP meshes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x, w, n_heads: int, eps: float = 1e-5):
+    """GroupNorm over per-head channels; x: (..., H*K), w: (H*K,)."""
+    dt = x.dtype
+    shp = x.shape
+    x = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(shp)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin (..., head_dim/2) float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, ..., Hd); cos/sin: (B, S, Hd/2) broadcast over head dims."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    ndim_extra = x.ndim - cos.ndim
+    for _ in range(ndim_extra):
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg, prefix_dims=("layers",), n_layers=None,
+                   cross: bool = False):
+    """ParamDefs for one (stacked) attention block."""
+    D, H, KV, Hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    L = (n_layers,) if n_layers is not None else ()
+    pd = tuple(prefix_dims) if n_layers is not None else ()
+    return {
+        "wq": ParamDef(L + (D, H, Hd), pd + ("embed", "heads", "head_dim")),
+        "wk": ParamDef(L + (D, KV, Hd), pd + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef(L + (D, KV, Hd), pd + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef(L + (H, Hd, D), pd + ("heads", "head_dim", "embed")),
+    }
+
+
+def _grouped_scores(q, k, scale):
+    """q: (B,S,KV,G,Hd), k: (B,T,KV,Hd) -> scores (B,KV,G,S,T) float32."""
+    return jnp.einsum("bskgh,btkh->bkgst", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+# default query-chunk: bounds the live (Qc, T) score block on TPU VMEM/HBM
+ATTN_Q_CHUNK = 1024
+
+
+def _attn_one_chunk(qc, k, v, qpos_c, kpos, scale, scores_dtype=jnp.float32):
+    """qc: (B,Qc,KV,G,Hd); k/v: (B,T,KV,Hd); positions -> out (B,Qc,KV,G,Hd)."""
+    scores = jnp.einsum("bskgh,btkh->bkgst", qc, k,
+                        preferred_element_type=scores_dtype) * scale
+    mask = kpos[:, None, None, None, :] <= qpos_c[:, None, None, :, None]
+    neg = jnp.asarray(jnp.finfo(scores_dtype).min / 2, scores_dtype)
+    scores = jnp.where(mask, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def chunked_causal_attention(q, k, v, qpos, kpos, scale, q_chunk=ATTN_Q_CHUNK,
+                             unroll=False, scores_dtype=jnp.float32):
+    """Exact causal attention without materializing the full (S, T) score
+    matrix: scans over query chunks so only a (Qc, T) block is ever live.
+    This is the jnp-level TPU adaptation of flash attention used for lowering
+    & roofline (the Pallas kernel in ``repro.kernels`` is the on-TPU fast
+    path).  ``unroll=True`` is used by the dry-run cost probe (while-loop
+    bodies are counted once by HLO cost analysis)."""
+    B, S, KV, G, Hd = q.shape
+    if S <= q_chunk:
+        return _attn_one_chunk(q, k, v, qpos, kpos, scale, scores_dtype)
+    assert S % q_chunk == 0, (S, q_chunk)
+    NC = S // q_chunk
+    qs = jnp.moveaxis(q.reshape(B, NC, q_chunk, KV, G, Hd), 1, 0)
+    ps = jnp.moveaxis(qpos.reshape(B, NC, q_chunk), 1, 0)
+    if unroll:
+        outs = [_attn_one_chunk(qs[i], k, v, ps[i], kpos, scale, scores_dtype)
+                for i in range(NC)]
+        out = jnp.stack(outs, axis=0)
+    else:
+        def body(_, xs):
+            qc, pc = xs
+            return None, _attn_one_chunk(qc, k, v, pc, kpos, scale,
+                                         scores_dtype)
+        _, out = jax.lax.scan(body, None, (qs, ps))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, KV, G, Hd)
+
+
+def multihead_attention(w, x, *, cfg, positions, kv_positions=None,
+                        causal=True, kv_cache=None, cache_pos=None,
+                        memory=None):
+    """Grouped-query attention.
+
+    x: (B, S, D).  With ``kv_cache=(ck, cv)`` of shape (B, T, KV, Hd) the new
+    K/V are written at ``cache_pos`` and attention runs over the cache
+    (decode).  With ``memory`` (B, T, D), keys/values come from memory
+    (cross-attention; no RoPE on memory side convention: RoPE applied to both
+    with their own positions unless cross).
+    """
+    B, S, D = x.shape
+    H, KV, Hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    cross = memory is not None
+
+    q = jnp.einsum("bsd,dhk->bshk", x, w["wq"])
+    src = memory if cross else x
+    k = jnp.einsum("btd,dkh->btkh", src, w["wk"])
+    v = jnp.einsum("btd,dkh->btkh", src, w["wv"])
+
+    if not cross:
+        cos, sin = rope_cos_sin(positions, Hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        kp = positions if kv_positions is None else kv_positions
+        cosk, sink = rope_cos_sin(kp, Hd, cfg.rope_theta)
+        k = apply_rope(k, cosk, sink)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        if S == 1:
+            # decode: per-slot write positions (continuous batching)
+            rows = jnp.arange(B)
+            cols = positions[:, 0]
+            ck = ck.at[rows, cols].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, cols].set(v[:, 0].astype(cv.dtype))
+        else:
+            # prefill: contiguous block write at cache_pos
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    else:
+        new_cache = None
+
+    # on-TPU fast path: Pallas flash kernel (self-attention, no cache)
+    if (getattr(cfg, "attn_impl", "einsum") == "flash" and kv_cache is None
+            and not cross and causal and x.shape[1] % 128 == 0):
+        from repro.kernels import ops as kops
+        qf = q.reshape(B, S, KV, H // KV, Hd).transpose(0, 2, 3, 1, 4)
+        qf = qf.reshape(B * H, S, Hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, Hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, Hd)
+        o = kops.attention(qf, kf, vf, causal=True, group=H // KV,
+                           interpret=kops.backend_interpret())
+        o = o.reshape(B, H, S, Hd).transpose(0, 2, 1, 3)
+        out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), w["wo"])
+        return out
+
+    q = q.reshape(B, S, KV, G, Hd)
+    T = k.shape[1]
+    scale = 1.0 / float(Hd) ** 0.5
+    if kv_cache is not None:
+        kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        qpos = positions
+    elif causal and not cross:
+        kpos, qpos = positions, positions
+    else:
+        # bidirectional / cross: kpos=0 <= qpos makes the mask all-true
+        kpos = jnp.zeros((B, T), jnp.int32)
+        qpos = jnp.maximum(positions, 0)
+    o = chunked_causal_attention(
+        q, k, v, qpos, kpos, scale,
+        unroll=not getattr(cfg, "scan_layers", True),
+        scores_dtype=jnp.dtype(getattr(cfg, "attn_scores_dtype", "float32")))
+    o = o.reshape(B, S, H, Hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, w["wo"])
+    return (out, new_cache) if kv_cache is not None else out
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_defs(cfg, n_layers=None, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    L = (n_layers,) if n_layers is not None else ()
+    pd = ("layers",) if n_layers is not None else ()
+    return {
+        "w1": ParamDef(L + (D, F), pd + ("embed", "mlp")),
+        "w3": ParamDef(L + (D, F), pd + ("embed", "mlp")),
+        "w2": ParamDef(L + (F, D), pd + ("mlp", "embed")),
+    }
+
+
+def swiglu(w, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w["w1"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, w["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, w["w2"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg):
+    return {
+        "tok": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=0.02),
+    }
+
+
+def head_defs(cfg):
+    if cfg.tie_embeddings:
+        return {}
+    return {"out": ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"))}
+
+
+def logits_from(params, x, cfg):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"])
+    return jnp.einsum("bsd,dv->bsv", x, params["head"]["out"])
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE over (optionally masked) positions; logits f32-stabilized."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

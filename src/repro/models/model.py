@@ -1,0 +1,140 @@
+"""Unified model API over all families.
+
+``Model(cfg)`` exposes:
+
+* ``param_defs / abstract_params / init_params / param_dims``
+* ``loss(params, batch)``                      — training objective
+* ``prefill(params, batch, cache)``            — context ingest, writes cache
+* ``decode_step(params, batch, cache)``        — one token, updates cache
+* ``input_specs(shape, mesh)``                 — ShapeDtypeStruct stand-ins for
+  every model input of an assigned (arch × shape) cell (dry-run entry point)
+* ``cache_abstract(batch, seq)``               — abstract cache pytree
+
+Shape semantics for the special families (DESIGN.md §3):
+
+* ``encdec``: ``seq_len`` is split ``encoder_frac`` / rest between stub audio
+  frames and decoder tokens; decode runs the decoder with self-cache
+  ``seq_len*(1-frac)`` and cross-cache over ``seq_len*frac`` frames.
+* ``vlm``: ``n_patches`` stub patch embeddings are prepended; text length is
+  ``seq_len - n_patches`` so total context matches the assigned cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.params import (abstract_params, init_params, param_dims)
+
+BATCH_DIMS = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "positions": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "patches": ("batch", "patches", "patch_dim"),
+    "frames": ("batch", "frames", "embed"),
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._encdec = cfg.family == "encdec"
+
+    # -- parameters ---------------------------------------------------------
+    def param_defs(self):
+        if self._encdec:
+            return encdec_mod.encdec_defs(self.cfg)
+        return tf_mod.stack_defs(self.cfg)
+
+    def abstract_params(self):
+        return abstract_params(self.param_defs(), jnp.dtype(self.cfg.dtype))
+
+    def init_params(self, rng):
+        return init_params(self.param_defs(), rng, jnp.dtype(self.cfg.dtype))
+
+    def param_dims(self):
+        return param_dims(self.param_defs())
+
+    # -- steps ---------------------------------------------------------------
+    def loss(self, params, batch, mesh=None):
+        if self._encdec:
+            return encdec_mod.lm_loss(params, batch, self.cfg, mesh)
+        return tf_mod.lm_loss(params, batch, self.cfg, mesh)
+
+    def forward(self, params, batch, cache=None, mesh=None):
+        if self._encdec:
+            return encdec_mod.forward(params, batch, self.cfg, cache, mesh)
+        return tf_mod.forward(params, batch, self.cfg, cache, mesh)
+
+    def prefill(self, params, batch, cache, mesh=None):
+        out = self.forward(params, batch, cache=cache, mesh=mesh)
+        return out.logits[:, -1], out.cache
+
+    def decode_step(self, params, batch, cache, mesh=None):
+        """batch['tokens']: (B, 1).  Returns (next_token (B,), cache)."""
+        out = self.forward(params, batch, cache=cache, mesh=mesh)
+        next_tok = jnp.argmax(out.logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), out.cache
+
+    # -- caches ---------------------------------------------------------------
+    def cache_abstract(self, batch: int, seq: int):
+        cfg = self.cfg
+        if self._encdec:
+            fr = int(seq * cfg.encdec.encoder_frac)
+            return encdec_mod.encdec_cache_spec(cfg, batch, seq - fr, fr)
+        return tf_mod.cache_spec(cfg, batch, seq)
+
+    def init_cache(self, batch: int, seq: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_abstract(batch, seq))
+
+    def cache_dims(self):
+        cache_dims = dict(tf_mod.CACHE_DIMS)
+        cache_dims.update(xk=tf_mod.CACHE_DIMS["k"], xv=tf_mod.CACHE_DIMS["v"])
+        return cache_dims
+
+    # -- dry-run input specs ---------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """Abstract inputs for one assigned cell (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        SD = jax.ShapeDtypeStruct
+        dt = jnp.dtype(cfg.dtype)
+
+        if shape.kind == "train":
+            if self._encdec:
+                fr = int(S * cfg.encdec.encoder_frac)
+                return {"frames": SD((B, fr, cfg.d_model), dt),
+                        "tokens": SD((B, S - fr), i32),
+                        "labels": SD((B, S - fr), i32)}
+            batch = {"tokens": SD((B, S), i32), "labels": SD((B, S), i32)}
+            if cfg.family == "vlm":
+                p = cfg.vlm.n_patches
+                batch["tokens"] = SD((B, S - p), i32)
+                batch["labels"] = SD((B, S - p), i32)
+                batch["patches"] = SD((B, p, cfg.vlm.patch_dim), dt)
+            return batch
+
+        if shape.kind == "prefill":
+            if self._encdec:
+                fr = int(S * cfg.encdec.encoder_frac)
+                return {"frames": SD((B, fr, cfg.d_model), dt),
+                        "tokens": SD((B, S - fr), i32)}
+            batch = {"tokens": SD((B, S), i32)}
+            if cfg.family == "vlm":
+                p = cfg.vlm.n_patches
+                batch["tokens"] = SD((B, S - p), i32)
+                batch["patches"] = SD((B, p, cfg.vlm.patch_dim), dt)
+            return batch
+
+        # decode: one token against a cache of length seq_len
+        return {"tokens": SD((B, 1), i32)}
+
+    def batch_dims(self, batch: Dict[str, Any]):
+        return {k: BATCH_DIMS[k] for k in batch}

@@ -1,0 +1,79 @@
+"""Declarative parameter system.
+
+Model builders produce nested dicts of :class:`ParamDef` — (shape, logical
+dims, init).  From a single definition tree we derive:
+
+* ``init_params``     — materialized random weights (CPU smoke tests, examples)
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` stand-ins (dry-run lowering)
+* ``param_dims``      — logical-dims tree consumed by the sharding resolver
+
+Logical dim names (resolved per-model by ``repro.distributed.sharding``):
+``layers, experts, embed, vocab, heads, kv_heads, head_dim, mlp, batch, seq,
+conv, ssm_state, lora, groups, frames, patches`` — plus ``None`` for
+never-sharded dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | constant
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in) for 'normal'
+    value: float = 0.0             # for 'constant'
+    dtype: Optional[str] = None    # override model dtype (e.g. 'float32')
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def _leaf_dtype(d: ParamDef, default_dtype) -> jnp.dtype:
+    return jnp.dtype(d.dtype) if d.dtype is not None else jnp.dtype(default_dtype)
+
+
+def abstract_params(defs, dtype):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, _leaf_dtype(d, dtype)),
+        defs, is_leaf=_is_def)
+
+
+def param_dims(defs):
+    return jax.tree.map(lambda d: d.dims, defs, is_leaf=_is_def)
+
+
+def _init_one(d: ParamDef, key, dtype):
+    dt = _leaf_dtype(d, dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "constant":
+        return jnp.full(d.shape, d.value, dt)
+    if d.init == "normal":
+        fan_in = d.shape[0] if len(d.shape) == 1 else math.prod(d.shape[:-1])
+        # stacked layer/expert dims don't contribute to fan-in
+        n_stack = sum(1 for dim in d.dims[:-1] if dim in ("layers", "experts"))
+        if n_stack and len(d.shape) > 1 + n_stack:
+            fan_in = math.prod(d.shape[n_stack:-1])
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dt)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs, rng, dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,228 @@
+"""RWKV6 "Finch" blocks — data-dependent per-channel decay, attention-free.
+
+TPU-native adaptation: the WKV6 recurrence is computed in a chunked
+GLA-style matmul form (DESIGN.md §2).  Within a chunk of ``Q`` tokens the
+pairwise contribution is
+
+    att[i, j] = sum_K  r_i[K] · exp(cum[i-1] - cum[j]) · k_j[K]   (j < i)
+    att[i, i] = sum_K  r_i[K] · u[K] · k_i[K]                      (bonus)
+
+with ``cum`` the inclusive within-chunk cumulative log-decay.  Across chunks
+a state ``(B, H, K, V)`` is carried by ``lax.scan``.
+
+Numerics: the factorization requires ``exp(-cum_j)`` which is unbounded, so
+the per-step log-decay is clamped to ``[-DECAY_CLAMP, -1e-6]`` and the chunk
+kept small enough that ``|cum| ≤ chunk·DECAY_CLAMP`` stays in f32 range.
+With chunk=32 and clamp 2.2, |cum| ≤ 70.4 < 88 (f32 exp overflow).  Real
+RWKV6 decays sit near 1 so the clamp is inactive in practice; the decode
+path is the exact recurrence.  Token-shift uses static learned mixing (the
+LoRA-dynamic token-shift of full RWKV6 is orthogonal to the sequence-mixing
+math; the headline data-dependent *decay* is implemented faithfully).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import group_norm_heads
+from repro.models.params import ParamDef
+
+DECAY_CLAMP = 2.2
+
+
+def rwkv_dims(cfg):
+    K = cfg.rwkv.head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def rwkv_defs(cfg, n_layers=None):
+    D, F = cfg.d_model, cfg.d_ff
+    H, K = rwkv_dims(cfg)
+    R = cfg.rwkv.decay_lora
+    L = (n_layers,) if n_layers is not None else ()
+    pd = ("layers",) if n_layers is not None else ()
+    mix = lambda: ParamDef(L + (D,), pd + ("embed",), init="constant", value=0.5)
+    return {
+        # time-mix (WKV) block
+        "mu_r": mix(), "mu_k": mix(), "mu_v": mix(), "mu_w": mix(), "mu_g": mix(),
+        "wr": ParamDef(L + (D, H, K), pd + ("embed", "heads", "head_dim")),
+        "wk": ParamDef(L + (D, H, K), pd + ("embed", "heads", "head_dim")),
+        "wv": ParamDef(L + (D, H, K), pd + ("embed", "heads", "head_dim")),
+        "wg": ParamDef(L + (D, H, K), pd + ("embed", "heads", "head_dim")),
+        "w0": ParamDef(L + (H, K), pd + ("heads", "head_dim"),
+                       init="constant", value=-0.6, dtype="float32"),
+        "wl1": ParamDef(L + (D, R), pd + ("embed", "lora"), scale=0.01),
+        "wl2": ParamDef(L + (R, H, K), pd + ("lora", "heads", "head_dim"),
+                        scale=0.01),
+        "u": ParamDef(L + (H, K), pd + ("heads", "head_dim"),
+                      init="constant", value=0.5, dtype="float32"),
+        "ln_x": ParamDef(L + (D,), pd + ("embed",), init="ones"),
+        "wo": ParamDef(L + (H, K, D), pd + ("heads", "head_dim", "embed")),
+        # channel-mix block
+        "mu_ck": mix(), "mu_cr": mix(),
+        "ck": ParamDef(L + (D, F), pd + ("embed", "mlp")),
+        "cv": ParamDef(L + (F, D), pd + ("mlp", "embed")),
+        "cr": ParamDef(L + (D, D), pd + ("embed", "embed_out")),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array       # (B, H, K, V) f32
+    shift_tm: jax.Array  # (B, D) last token entering time-mix
+    shift_cm: jax.Array  # (B, D) last token entering channel-mix
+
+
+def init_rwkv_state(cfg, batch, dtype=jnp.float32):
+    H, K = rwkv_dims(cfg)
+    D = cfg.d_model
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, K, K), jnp.float32),
+        shift_tm=jnp.zeros((batch, D), dtype),
+        shift_cm=jnp.zeros((batch, D), dtype),
+    )
+
+
+def _shift(x, last=None):
+    """x_{t-1} along time; ``last`` seeds t=0 (decode continuity)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, : x.shape[1]]
+    if last is not None:
+        prev = prev.at[:, 0].set(last)
+    return prev
+
+
+def _log_decay(w, xw):
+    """Data-dependent per-channel log-decay (B,S,H,K), clamped ≤ -1e-6."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, w["wl1"])
+    lora = jnp.einsum("bsr,rhk->bshk", jnp.tanh(lora), w["wl2"])
+    logw = -jnp.exp(jnp.clip(w["w0"][None, None] + lora.astype(jnp.float32),
+                             -20.0, jnp.log(DECAY_CLAMP)))
+    return jnp.clip(logw, -DECAY_CLAMP, -1e-6)
+
+
+def _time_mix_inputs(w, x, last=None):
+    prev = _shift(x, last)
+    def lerp(mu):
+        return x + (prev - x) * mu
+    xr, xk, xv, xw, xg = (lerp(w[m]) for m in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g"))
+    r = jnp.einsum("bsd,dhk->bshk", xr, w["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", xk, w["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xv, w["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", xg, w["wg"])
+    logw = _log_decay(w, xw)
+    return r, k, v, g, logw
+
+
+def time_mix(w, x, cfg, state: Optional[RWKVState] = None):
+    """WKV6 time-mixing.  x: (B,S,D) -> (y, new_state|None)."""
+    B, S, D = x.shape
+    H, K = rwkv_dims(cfg)
+    if state is not None and S == 1:
+        return _time_mix_decode(w, x, cfg, state)
+
+    Q = min(cfg.rwkv.chunk, S)
+    last = state.shift_tm if state is not None else None
+    r, k, v, g, logw = _time_mix_inputs(w, x, last)
+
+    # ragged S: zero-pad to a chunk multiple; pad positions get k=0 (no
+    # state contribution) and logw=0 (decay-neutral), so the carried state
+    # is exact.
+    S_real = S
+    if S % Q != 0:
+        pad = Q - S % Q
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = padt(r), padt(k), padt(v), padt(logw)
+        S = S + pad
+    NC = S // Q
+
+    rf = r.reshape(B, NC, Q, H, K).astype(jnp.float32)
+    kf = k.reshape(B, NC, Q, H, K).astype(jnp.float32)
+    vf = v.reshape(B, NC, Q, H, K).astype(jnp.float32)
+    lw = logw.reshape(B, NC, Q, H, K)
+
+    def chunk_step(st, inp):
+        rq, kq, vq, lq = inp                       # (B,Q,H,K)
+        cum = jnp.cumsum(lq, axis=1)               # inclusive
+        cum_prev = cum - lq                        # cum_{i-1} w.r.t. channel decay
+        q_dec = rq * jnp.exp(cum_prev)
+        k_dec = kq * jnp.exp(-cum)
+        att = jnp.einsum("bihk,bjhk->bhij", q_dec, k_dec)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)   # strictly lower
+        att = jnp.where(mask[None, None], att, 0.0)
+        diag = jnp.einsum("bihk,hk,bihk->bhi", rq, w["u"], kq)
+        y = jnp.einsum("bhij,bjhk->bihk", att, vq)
+        y = y + diag[..., None].transpose(0, 2, 1, 3) * vq
+        # inter-chunk
+        y = y + jnp.einsum("bihk,bhkv->bihv", q_dec, st)
+        # state update
+        tot = cum[:, -1]                            # (B,H,K)
+        kup = kq * jnp.exp(tot[:, None] - cum)
+        st = jnp.exp(tot)[..., None] * st + jnp.einsum("bjhk,bjhv->bhkv", kup, vq)
+        return st, y
+
+    st0 = (state.wkv if state is not None
+           else jnp.zeros((B, H, K, K), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, lw))
+    if getattr(cfg, "scan_layers", True):
+        st, ys = jax.lax.scan(chunk_step, st0, xs)
+    else:  # unrolled for the dry-run cost probe
+        st, ys_l = st0, []
+        for c in range(NC):
+            st, y_c = chunk_step(st, jax.tree.map(lambda a: a[c], xs))
+            ys_l.append(y_c)
+        ys = jnp.stack(ys_l, axis=0)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * K)[:, :S_real].astype(x.dtype)
+
+    y = group_norm_heads(y, w["ln_x"], H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.reshape(B, S_real, H * K))
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, S_real, H, K), w["wo"])
+    new = None
+    if state is not None:
+        new = state._replace(wkv=st, shift_tm=x[:, -1])
+    return out, new
+
+
+def _time_mix_decode(w, x, cfg, state: RWKVState):
+    """Exact single-token recurrence."""
+    B, S, D = x.shape
+    H, K = rwkv_dims(cfg)
+    r, k, v, g, logw = _time_mix_inputs(w, x, state.shift_tm)
+    r1 = r[:, 0].astype(jnp.float32)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    lw1 = logw[:, 0]                                # (B,H,K)
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = jnp.einsum("bhk,bhkv->bhv", r1 * w["u"][None], kv)
+    y = y + jnp.einsum("bhk,bhkv->bhv", r1, state.wkv)
+    st = jnp.exp(lw1)[..., None] * state.wkv + kv
+    y = y.reshape(B, 1, H * K).astype(x.dtype)
+    y = group_norm_heads(y, w["ln_x"], H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.reshape(B, 1, H * K))
+    out = jnp.einsum("bshk,hkd->bsd", y.reshape(B, 1, H, K), w["wo"])
+    return out, state._replace(wkv=st, shift_tm=x[:, -1])
+
+
+def channel_mix(w, x, state: Optional[RWKVState] = None):
+    last = state.shift_cm if state is not None else None
+    prev = _shift(x, last)
+    xk = x + (prev - x) * w["mu_ck"]
+    xr = x + (prev - x) * w["mu_cr"]
+    kk = jnp.einsum("bsd,df->bsf", xk, w["ck"])
+    kk = jnp.square(jax.nn.relu(kk))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, w["cr"])) * jnp.einsum(
+        "bsf,fd->bsd", kk, w["cv"])
+    new = state._replace(shift_cm=x[:, -1]) if state is not None else None
+    return out, new
+
+
+def wkv_reference(w, x, cfg):
+    """O(S) recurrent oracle for the time-mix block (tests only)."""
+    B, S, D = x.shape
+    st = init_rwkv_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(S):
+        o, st = _time_mix_decode(w, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

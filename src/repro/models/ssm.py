@@ -1,0 +1,229 @@
+"""Mamba2 (SSD) blocks — TPU-native chunked matmul formulation.
+
+The GPU reference implementation relies on a fused selective-scan CUDA
+kernel; the TPU-native adaptation (DESIGN.md §2) uses the SSD block
+decomposition: within a chunk of ``Q`` tokens the state contribution is a
+masked (Q×Q) "attention" matmul, across chunks a tiny recurrent state
+``(B, H, P, N)`` is carried by ``lax.scan``.  Everything is einsum → MXU.
+
+All decay exponents are ≤ 0 (A = -exp(A_log), dt ≥ 0) so every ``exp`` here
+is bounded in (0, 1] — numerically safe in f32.
+
+Sharding: SSM heads over ``model`` (e.g. zamba2: H = d_inner/P = 64 heads),
+B/C projections (state dim N) replicated, batch over data.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.params import ParamDef
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.head_dim, s.d_state
+
+
+def mamba_defs(cfg, n_layers=None):
+    D = cfg.d_model
+    d_in, H, Pd, N = ssm_dims(cfg)
+    dc = cfg.ssm.d_conv
+    L = (n_layers,) if n_layers is not None else ()
+    pd = ("layers",) if n_layers is not None else ()
+    return {
+        "in_z": ParamDef(L + (D, d_in), pd + ("embed", "mlp")),
+        "in_x": ParamDef(L + (D, d_in), pd + ("embed", "mlp")),
+        "in_b": ParamDef(L + (D, N), pd + ("embed", "ssm_state")),
+        "in_c": ParamDef(L + (D, N), pd + ("embed", "ssm_state")),
+        "in_dt": ParamDef(L + (D, H), pd + ("embed", "heads")),
+        "dt_bias": ParamDef(L + (H,), pd + ("heads",), init="zeros", dtype="float32"),
+        "A_log": ParamDef(L + (H,), pd + ("heads",), init="constant", value=0.5,
+                          dtype="float32"),
+        "D_skip": ParamDef(L + (H,), pd + ("heads",), init="ones", dtype="float32"),
+        "conv_x": ParamDef(L + (dc, d_in), pd + ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamDef(L + (dc, N), pd + ("conv", "ssm_state"), scale=0.5),
+        "conv_c": ParamDef(L + (dc, N), pd + ("conv", "ssm_state"), scale=0.5),
+        "norm": ParamDef(L + (d_in,), pd + ("mlp",), init="ones"),
+        "out": ParamDef(L + (d_in, D), pd + ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along time.  x: (B,S,C), w: (dc,C)."""
+    dc = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _conv_state_step(buf, x_t, w):
+    """Single-token conv with carried buffer.  buf: (B,dc-1,C), x_t: (B,1,C)."""
+    full = jnp.concatenate([buf, x_t], axis=1)           # (B, dc, C)
+    y = jnp.einsum("bdc,dc->bc", full, w)[:, None]       # (B,1,C)
+    return full[:, 1:], y
+
+
+class SSMState(NamedTuple):
+    state: jax.Array        # (B, H, P, N) f32
+    conv_x: jax.Array       # (B, dc-1, d_in)
+    conv_b: jax.Array       # (B, dc-1, N)
+    conv_c: jax.Array       # (B, dc-1, N)
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    d_in, H, Pd, N = ssm_dims(cfg)
+    dc = cfg.ssm.d_conv
+    return SSMState(
+        state=jnp.zeros((batch, H, Pd, N), jnp.float32),
+        conv_x=jnp.zeros((batch, dc - 1, d_in), dtype),
+        conv_b=jnp.zeros((batch, dc - 1, N), dtype),
+        conv_c=jnp.zeros((batch, dc - 1, N), dtype),
+    )
+
+
+def _project(w, x):
+    z = jnp.einsum("bsd,de->bse", x, w["in_z"])
+    xin = jnp.einsum("bsd,de->bse", x, w["in_x"])
+    bt = jnp.einsum("bsd,dn->bsn", x, w["in_b"])
+    ct = jnp.einsum("bsd,dn->bsn", x, w["in_c"])
+    dt = jnp.einsum("bsd,dh->bsh", x, w["in_dt"])
+    return z, xin, bt, ct, dt
+
+
+def _discretize(w, dt):
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + w["dt_bias"])
+    A = -jnp.exp(w["A_log"])
+    return dt, dt * A                                    # dt (B,S,H), dA ≤ 0
+
+
+def mamba_block(w, x, cfg, ssm_state: Optional[SSMState] = None):
+    """Full Mamba2 mixer.  x: (B,S,D) -> (y, new_state|None).
+
+    Training/prefill path uses the chunked SSD scan; pass ``ssm_state`` for
+    single-token decode (S == 1).
+    """
+    if ssm_state is not None and x.shape[1] == 1:
+        return _mamba_decode(w, x, cfg, ssm_state)
+    B, S, D = x.shape
+    d_in, H, Pd, N = ssm_dims(cfg)
+    Q = min(cfg.ssm.chunk, S)
+
+    z, xin_raw, bt_raw, ct_raw, dt = _project(w, x)
+    xin = jax.nn.silu(_causal_conv(xin_raw, w["conv_x"]))
+    bt = _causal_conv(bt_raw, w["conv_b"])
+    ct = _causal_conv(ct_raw, w["conv_c"])
+    dt, dA = _discretize(w, dt)
+
+    # ragged S: zero-pad to a chunk multiple.  dt=0/dA=0 on pad positions
+    # makes them decay-neutral no-ops for the carried state.
+    S_real = S
+    if S % Q != 0:
+        pad = Q - S % Q
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xin, bt, ct, dt, dA = (padt(t) for t in (xin, bt, ct, dt, dA))
+        S = S + pad
+    NC = S // Q
+
+    xh = xin.reshape(B, NC, Q, H, Pd).astype(jnp.float32)
+    btc = bt.reshape(B, NC, Q, N).astype(jnp.float32)
+    ctc = ct.reshape(B, NC, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, NC, Q, H)
+    dAc = dA.reshape(B, NC, Q, H)
+
+    # scan over chunks; carry state (B,H,P,N)
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq, daq = inp                       # (B,Q,...)
+        cum = jnp.cumsum(daq, axis=1)                    # (B,Q,H) inclusive
+        # intra-chunk
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)          # (B,Q,Q)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H) i,j
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        att = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        att = att * cb[..., None] * dtq[:, None, :, :]   # weight token j
+        y = jnp.einsum("bijh,bjhp->bihp", att, xq)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bin,bhpn->bihp", cq, state) * jnp.exp(cum)[..., None]
+        # state update
+        decay_all = jnp.exp(cum[:, -1])                  # (B,H)
+        wj = dtq * jnp.exp(cum[:, -1:, :] - cum)         # (B,Q,H)
+        state = decay_all[..., None, None] * state + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", wj, bq, xq)
+        return state, y
+
+    state0 = (ssm_state.state if ssm_state is not None
+              else jnp.zeros((B, H, Pd, N), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, btc, ctc, dtc, dAc))
+    if getattr(cfg, "scan_layers", True):
+        state, ys = jax.lax.scan(chunk_step, state0, xs)
+    else:  # unrolled for the dry-run cost probe
+        state, ys_l = state0, []
+        for c in range(NC):
+            state, y_c = chunk_step(state, jax.tree.map(lambda a: a[c], xs))
+            ys_l.append(y_c)
+        ys = jnp.stack(ys_l, axis=0)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, Pd)
+    y = y + xh.reshape(B, S, H, Pd) * w["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in)[:, :S_real].astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, w["out"])
+
+    new_state = None
+    if ssm_state is not None:
+        dc = cfg.ssm.d_conv
+        # conv buffers carry the last dc-1 *raw* (pre-conv) projections
+        # (pre-padding: the raw tensors were never padded)
+        new_state = SSMState(
+            state=state,
+            conv_x=xin_raw[:, S_real - (dc - 1):],
+            conv_b=bt_raw[:, S_real - (dc - 1):],
+            conv_c=ct_raw[:, S_real - (dc - 1):],
+        )
+    return out, new_state
+
+
+def _mamba_decode(w, x, cfg, st: SSMState):
+    """Single-token recurrent step (exact)."""
+    B, S, D = x.shape
+    d_in, H, Pd, N = ssm_dims(cfg)
+    z, xin_raw, bt_raw, ct_raw, dt = _project(w, x)
+    conv_x, xin = _conv_state_step(st.conv_x, xin_raw, w["conv_x"])
+    conv_b, bt = _conv_state_step(st.conv_b, bt_raw, w["conv_b"])
+    conv_c, ct = _conv_state_step(st.conv_c, ct_raw, w["conv_c"])
+    xin = jax.nn.silu(xin)
+    dt, dA = _discretize(w, dt)
+
+    xh = xin.reshape(B, H, Pd).astype(jnp.float32)
+    b1 = bt.reshape(B, N).astype(jnp.float32)
+    c1 = ct.reshape(B, N).astype(jnp.float32)
+    dt1 = dt.reshape(B, H)
+    da1 = dA.reshape(B, H)
+
+    state = jnp.exp(da1)[..., None, None] * st.state + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, b1, xh)
+    y = jnp.einsum("bn,bhpn->bhp", c1, state)
+    y = y + xh * w["D_skip"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, w["out"])
+    new = SSMState(state=state, conv_x=conv_x, conv_b=conv_b, conv_c=conv_c)
+    return out, new
+
+
+def mamba_reference(w, x, cfg):
+    """O(S) recurrent oracle (slow; tests only)."""
+    B, S, D = x.shape
+    st = init_ssm_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(S):
+        o, st = _mamba_decode(w, x[:, t:t + 1], cfg, st)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

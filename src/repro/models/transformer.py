@@ -1,0 +1,474 @@
+"""Decoder stacks for all assigned LM families.
+
+One code path serves training, prefill and decode:
+
+* ``forward(params, batch, cfg, cache=None)`` — runs the block stack.  With
+  ``cache`` it both *reads* (attention over cached K/V, SSM/WKV states) and
+  *writes* (updated cache as second return).  Prefill is simply the S>1 case
+  with a zero-initialized cache; decode is S==1.
+* layers are stacked on a leading ``L`` dim and executed by ``lax.scan``
+  (``cfg.scan_layers=True``, production: compiles one body) or a python loop
+  (``False``: used by the dry-run cost probe, see launch/costs.py).
+
+Block families: ``dense`` (GQA+RoPE+SwiGLU), ``moe`` (GQA + MoE FFN),
+``ssm`` (RWKV6 blocks), ``hybrid`` (Mamba2 backbone + weight-shared attention
+block every ``cfg.hybrid.attn_every`` layers, zamba2-style), ``vlm`` (dense
+backbone over [patch-embeds | text]).  Encoder-decoder lives in encdec.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (attention_defs, cross_entropy, embed_defs,
+                                 head_defs, logits_from, multihead_attention,
+                                 rms_norm, swiglu, swiglu_defs)
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _norm_def(cfg, L=None, dim=None):
+    d = dim or cfg.d_model
+    if L is None:
+        return ParamDef((d,), ("embed",), init="ones")
+    return ParamDef((L, d), ("layers", "embed"), init="ones")
+
+
+def stack_defs(cfg) -> Dict[str, Any]:
+    """Full parameter-definition tree for a decoder-only model.
+
+    ``cfg.scan_layers=True`` (production): layer params are stacked on a
+    leading L dim and executed by ``lax.scan``.  ``False`` (dry-run cost
+    probe): layers become a *list* of per-layer trees — slicing a stacked
+    tensor in an unrolled loop makes XLA accumulate each layer's gradient
+    into the full (L, ...) buffer, which is O(L²) HLO flops and would
+    corrupt the probe's linear depth extrapolation."""
+    L = cfg.n_layers
+    stacked = cfg.scan_layers
+
+    def one_layer(Ln):
+        if cfg.family in ("dense", "vlm", "moe"):
+            layer = {
+                "ln1": _norm_def(cfg, Ln),
+                "ln2": _norm_def(cfg, Ln),
+                "attn": attention_defs(cfg, n_layers=Ln),
+            }
+            if cfg.family == "moe":
+                layer["moe"] = moe_mod.moe_defs(cfg, n_layers=Ln,
+                                                stacked=stacked)
+            else:
+                layer["mlp"] = swiglu_defs(cfg, n_layers=Ln)
+            return layer
+        if cfg.family == "ssm":
+            return {
+                "ln1": _norm_def(cfg, Ln),
+                "ln2": _norm_def(cfg, Ln),
+                "rwkv": rwkv_mod.rwkv_defs(cfg, n_layers=Ln),
+            }
+        if cfg.family == "hybrid":
+            return {
+                "ln": _norm_def(cfg, Ln),
+                "mamba": ssm_mod.mamba_defs(cfg, n_layers=Ln),
+            }
+        raise ValueError(cfg.family)
+
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg)}
+    defs["layers"] = one_layer(L) if stacked else [one_layer(None)
+                                                   for _ in range(L)]
+    if cfg.family == "vlm":
+        defs["patch_proj"] = ParamDef(
+            (cfg.vlm.patch_dim, cfg.d_model), ("patch_dim", "embed"))
+    if cfg.family == "ssm":
+        defs["ln_in"] = _norm_def(cfg)
+    if cfg.family == "hybrid":
+        defs["shared"] = {
+            "ln1": _norm_def(cfg),
+            "ln2": _norm_def(cfg),
+            "attn": attention_defs(cfg),
+            "mlp": swiglu_defs(cfg),
+        }
+    defs["ln_f"] = _norm_def(cfg)
+    defs["head"] = head_defs(cfg)
+    return defs
+
+
+def layer_params(layers, i: int):
+    """Per-layer tree from either list-form (probe) or stacked params."""
+    if isinstance(layers, (list, tuple)):
+        return layers[i]
+    return jax.tree.map(lambda a: a[i], layers)
+
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=32)
+def _one_layer_dims(cfg):
+    """Per-layer logical dims: stacked-layer dims with 'layers' stripped."""
+    from repro.models.params import param_dims
+    defs = stack_defs(cfg.replace(scan_layers=True))["layers"]
+    full = param_dims(defs)
+    return jax.tree.map(
+        lambda d: tuple(d[1:]), full,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x))
+
+
+def constrain_layer_weights(w, cfg):
+    """Re-assert per-layer weight shardings inside scan bodies.
+
+    Without this, the SPMD partitioner may reshard (e.g. FSDP-all-gather)
+    the *whole stacked* parameter before the loop — hoisting 48 layers of
+    unsharded weights into live memory (observed: llama4 train at 277GiB/
+    device).  Constraining the sliced value keeps the gather per-iteration.
+    No-op when no mesh context is active."""
+    dims = _one_layer_dims(cfg)
+    return jax.tree.map(
+        lambda d, x: constrain(x, d), dims, w,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _n_attn_apps(cfg) -> int:
+    ae = cfg.hybrid.attn_every
+    return (cfg.n_layers + ae - 1) // ae
+
+
+def cache_spec(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Abstract cache pytree (ShapeDtypeStructs) for ``jax.eval_shape`` use;
+    concrete zero caches come from :func:`init_cache`."""
+    dt = jnp.dtype(cfg.dtype)
+    KV, Hd, L = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    S = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "vlm", "moe"):
+        return {"k": S((L, batch, max_len, KV, Hd), dt),
+                "v": S((L, batch, max_len, KV, Hd), dt),
+                "pos": S((), jnp.int32)}
+    if cfg.family == "ssm":
+        d_model = cfg.d_model
+        H, K = rwkv_mod.rwkv_dims(cfg)
+        return {"wkv": S((L, batch, H, K, K), jnp.float32),
+                "shift_tm": S((L, batch, d_model), dt),
+                "shift_cm": S((L, batch, d_model), dt),
+                "pos": S((), jnp.int32)}
+    if cfg.family == "hybrid":
+        d_in, H, Pd, N = ssm_mod.ssm_dims(cfg)
+        napp = _n_attn_apps(cfg)
+        dc = cfg.ssm.d_conv
+        return {"state": S((L, batch, H, Pd, N), jnp.float32),
+                "conv_x": S((L, batch, dc - 1, d_in), dt),
+                "conv_b": S((L, batch, dc - 1, N), dt),
+                "conv_c": S((L, batch, dc - 1, N), dt),
+                "attn_k": S((napp, batch, max_len, KV, Hd), dt),
+                "attn_v": S((napp, batch, max_len, KV, Hd), dt),
+                "pos": S((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+CACHE_DIMS = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "attn_k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "attn_v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "wkv": ("layers", "batch", "heads", "head_dim", None),
+    "shift_tm": ("layers", "batch", "embed"),
+    "shift_cm": ("layers", "batch", "embed"),
+    "state": ("layers", "batch", "heads", "head_dim", "ssm_state"),
+    "conv_x": ("layers", "batch", "conv", "mlp"),
+    "conv_b": ("layers", "batch", "conv", "ssm_state"),
+    "conv_c": ("layers", "batch", "conv", "ssm_state"),
+    "pos": (),
+}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(w, x, cfg, positions, cache_kv=None, cache_pos=None):
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    if cache_kv is not None:
+        a, new_kv = multihead_attention(
+            w["attn"], h, cfg=cfg, positions=positions, kv_cache=cache_kv,
+            cache_pos=cache_pos)
+    else:
+        a = multihead_attention(w["attn"], h, cfg=cfg, positions=positions)
+        new_kv = None
+    x = x + a
+    return x, new_kv
+
+
+def _dense_block(w, x, cfg, positions, cache_kv=None, cache_pos=None, mesh=None):
+    x, new_kv = _attn_block(w, x, cfg, positions, cache_kv, cache_pos)
+    h = rms_norm(x, w["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe_mod.moe_ffn(w["moe"], h, cfg, mesh)
+    else:
+        f, aux = swiglu(w["mlp"], h), 0.0
+    x = constrain(x + f, ("batch", "seq", "embed"))
+    return x, aux, new_kv
+
+
+def _rwkv_block(w, x, cfg, state=None):
+    h = rms_norm(x, w["ln1"], cfg.norm_eps)
+    t, state = rwkv_mod.time_mix(w["rwkv"], h, cfg, state)
+    x = x + t
+    h = rms_norm(x, w["ln2"], cfg.norm_eps)
+    c, state = rwkv_mod.channel_mix(w["rwkv"], h, state)
+    x = constrain(x + c, ("batch", "seq", "embed"))
+    return x, state
+
+
+def _mamba_layer(w, x, cfg, state=None):
+    h = rms_norm(x, w["ln"], cfg.norm_eps)
+    m, state = ssm_mod.mamba_block(w["mamba"], h, cfg, state)
+    x = constrain(x + m, ("batch", "seq", "embed"))
+    return x, state
+
+
+def _shared_attn_block(w, x, cfg, positions, cache_kv=None, cache_pos=None):
+    x, new_kv = _attn_block(w, x, cfg, positions, cache_kv, cache_pos)
+    h = rms_norm(x, w["ln2"], cfg.norm_eps)
+    x = x + swiglu(w["mlp"], h)
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.remat(fn, policy=pol)
+    return jax.remat(fn)
+
+
+def _run_attn_family(params, x, cfg, positions, cache, mesh):
+    L = cfg.n_layers
+    aux_total = 0.0
+    if cfg.scan_layers:
+        def body(carry, xs):
+            x, aux = carry
+            if cache is not None:
+                w, ck, cv = xs
+                w = constrain_layer_weights(w, cfg)
+                x, a, new_kv = _dense_block(w, x, cfg, positions, (ck, cv),
+                                            cache["pos"], mesh)
+                return (x, aux + a), new_kv
+            (w,) = xs
+            w = constrain_layer_weights(w, cfg)
+            x, a, _ = _dense_block(w, x, cfg, positions, mesh=mesh)
+            return (x, aux + a), None
+
+        body = _maybe_remat(body, cfg)
+        if cache is not None:
+            (x, aux_total), new_kvs = jax.lax.scan(
+                body, (x, 0.0), (params["layers"], cache["k"], cache["v"]))
+            new_cache = dict(cache, k=new_kvs[0], v=new_kvs[1],
+                             pos=cache["pos"] + x.shape[1])
+            return x, aux_total, new_cache
+        (x, aux_total), _ = jax.lax.scan(body, (x, 0.0), (params["layers"],))
+        return x, aux_total, None
+    # unrolled (cost probe / debugging)
+    new_k, new_v = [], []
+    for i in range(L):
+        w = layer_params(params["layers"], i)
+        ckv = ((cache["k"][i], cache["v"][i]) if cache is not None else None)
+        x, a, kv = _dense_block(w, x, cfg, positions, ckv,
+                                cache["pos"] if cache is not None else None, mesh)
+        aux_total = aux_total + a
+        if kv is not None:
+            new_k.append(kv[0])
+            new_v.append(kv[1])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, k=jnp.stack(new_k), v=jnp.stack(new_v),
+                         pos=cache["pos"] + x.shape[1])
+    return x, aux_total, new_cache
+
+
+def _run_rwkv(params, x, cfg, cache):
+    L = cfg.n_layers
+    if cfg.scan_layers:
+        def body(x, xs):
+            if cache is not None:
+                w, wkv, stm, scm = xs
+                w = constrain_layer_weights(w, cfg)
+                st = rwkv_mod.RWKVState(wkv, stm, scm)
+                x, st = _rwkv_block(w, x, cfg, st)
+                return x, (st.wkv, st.shift_tm, st.shift_cm)
+            (w,) = xs
+            w = constrain_layer_weights(w, cfg)
+            x, _ = _rwkv_block(w, x, cfg, None)
+            return x, None
+
+        body = _maybe_remat(body, cfg)
+        if cache is not None:
+            x, sts = jax.lax.scan(
+                body, x, (params["layers"], cache["wkv"], cache["shift_tm"],
+                          cache["shift_cm"]))
+            new_cache = dict(cache, wkv=sts[0], shift_tm=sts[1], shift_cm=sts[2],
+                             pos=cache["pos"] + x.shape[1])
+            return x, new_cache
+        x, _ = jax.lax.scan(body, x, (params["layers"],))
+        return x, None
+    outs = {"wkv": [], "shift_tm": [], "shift_cm": []}
+    for i in range(L):
+        w = layer_params(params["layers"], i)
+        st = (rwkv_mod.RWKVState(cache["wkv"][i], cache["shift_tm"][i],
+                                 cache["shift_cm"][i])
+              if cache is not None else None)
+        x, st = _rwkv_block(w, x, cfg, st)
+        if st is not None:
+            outs["wkv"].append(st.wkv)
+            outs["shift_tm"].append(st.shift_tm)
+            outs["shift_cm"].append(st.shift_cm)
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, pos=cache["pos"] + x.shape[1],
+                         **{k: jnp.stack(v) for k, v in outs.items()})
+    return x, new_cache
+
+
+def _run_hybrid(params, x, cfg, positions, cache):
+    """Mamba2 backbone; weight-shared attention block before every
+    ``attn_every``-th backbone layer (own KV cache per application)."""
+    L, ae = cfg.n_layers, cfg.hybrid.attn_every
+    groups = [(s, min(s + ae, L)) for s in range(0, L, ae)]
+    new = {k: [] for k in ("state", "conv_x", "conv_b", "conv_c",
+                           "attn_k", "attn_v")}
+
+    def mamba_slice(x, lo, hi):
+        if cfg.scan_layers:
+            sl = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+            def body(x, xs):
+                if cache is not None:
+                    w, st_, cx, cb, cc = xs
+                    w = constrain_layer_weights(w, cfg)
+                    st = ssm_mod.SSMState(st_, cx, cb, cc)
+                    x, st = _mamba_layer(w, x, cfg, st)
+                    return x, (st.state, st.conv_x, st.conv_b, st.conv_c)
+                (w,) = xs
+                w = constrain_layer_weights(w, cfg)
+                x, _ = _mamba_layer(w, x, cfg, None)
+                return x, None
+            body = _maybe_remat(body, cfg)
+            if cache is not None:
+                xs = (sl, cache["state"][lo:hi], cache["conv_x"][lo:hi],
+                      cache["conv_b"][lo:hi], cache["conv_c"][lo:hi])
+                x, sts = jax.lax.scan(body, x, xs)
+                for k, v in zip(("state", "conv_x", "conv_b", "conv_c"), sts):
+                    new[k].append(v)
+                return x
+            x, _ = jax.lax.scan(body, x, (sl,))
+            return x
+        for i in range(lo, hi):
+            w = layer_params(params["layers"], i)
+            st = (ssm_mod.SSMState(cache["state"][i], cache["conv_x"][i],
+                                   cache["conv_b"][i], cache["conv_c"][i])
+                  if cache is not None else None)
+            x, st = _mamba_layer(w, x, cfg, st)
+            if st is not None:
+                for k, v in zip(("state", "conv_x", "conv_b", "conv_c"),
+                                (st.state, st.conv_x, st.conv_b, st.conv_c)):
+                    new[k].append(v[None])
+        return x
+
+    for gi, (lo, hi) in enumerate(groups):
+        ckv = ((cache["attn_k"][gi], cache["attn_v"][gi])
+               if cache is not None else None)
+        x, kv = _shared_attn_block(
+            params["shared"], x, cfg, positions, ckv,
+            cache["pos"] if cache is not None else None)
+        if kv is not None:
+            new["attn_k"].append(kv[0][None])
+            new["attn_v"].append(kv[1][None])
+        x = mamba_slice(x, lo, hi)
+
+    if cache is None:
+        return x, None
+    new_cache = dict(cache, pos=cache["pos"] + x.shape[1],
+                     **{k: jnp.concatenate(v) for k, v in new.items()})
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Public forward
+# ---------------------------------------------------------------------------
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    aux_loss: jax.Array | float
+    cache: Optional[Dict[str, Any]]
+
+
+def forward(params, batch: Dict[str, Any], cfg, cache=None, mesh=None) -> ForwardOut:
+    """batch: {'tokens': (B,S) int32, optional 'patches': (B,P,patch_dim),
+    optional 'positions': (B,S)}."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"][tokens].astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm" and batch.get("patches") is not None:
+        p = jnp.einsum("bpe,ed->bpd", batch["patches"].astype(x.dtype),
+                       params["patch_proj"])
+        x = jnp.concatenate([p, x], axis=1)
+        S = x.shape[1]
+    if cfg.family == "ssm":
+        x = rms_norm(x, params["ln_in"], cfg.norm_eps)
+
+    positions = batch.get("positions")
+    if positions is None:
+        start = cache["pos"] if cache is not None else 0
+        positions = start + jnp.arange(S, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    x = constrain(x, ("batch", "seq", "embed"))
+    aux = 0.0
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, aux, cache = _run_attn_family(params, x, cfg, positions, cache, mesh)
+    elif cfg.family == "ssm":
+        x, cache = _run_rwkv(params, x, cfg, cache)
+    elif cfg.family == "hybrid":
+        x, cache = _run_hybrid(params, x, cfg, positions, cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_from(params, x, cfg)
+    return ForwardOut(logits, aux, cache)
+
+
+def lm_loss(params, batch, cfg, mesh=None):
+    """Next-token CE (+0.01·aux for MoE).  VLM: text positions only."""
+    out = forward(params, batch, cfg, mesh=mesh)
+    logits = out.logits
+    if cfg.family == "vlm":
+        npatch = batch["patches"].shape[1]
+        logits = logits[:, npatch:]
+    labels = batch["labels"]
+    loss = cross_entropy(logits[:, :-1], labels[:, 1:],
+                         batch.get("loss_mask", None))
+    if cfg.family == "moe":
+        loss = loss + 0.01 * out.aux_loss
+    return loss

@@ -1,0 +1,179 @@
+"""jit-able train / prefill / decode steps with sharding resolution.
+
+``make_train_step`` builds the full production step: microbatched gradient
+accumulation (``lax.scan``), fp32 accumulation, AdamW/ZeRO update, loss +
+grad-norm metrics.  ``build_cell`` returns everything the dry-run and the
+trainer need for one (arch × shape × mesh) cell: the step fn, abstract
+inputs, and in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models.model import Model, BATCH_DIMS
+from repro.training import optimizer as opt_mod
+
+
+def make_train_step(model: Model, hp: opt_mod.OptConfig, mesh=None):
+    cfg = model.cfg
+    pdt = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, mesh=mesh)
+
+    # ZeRO-2: keep the f32 microbatch gradient accumulator sharded like the
+    # optimizer state (data axis on top of TP) — XLA reduce-scatters each
+    # microbatch's grads instead of holding a replicated f32 copy.
+    zero_sh = None
+    if mesh is not None and cfg.microbatches > 1:
+        rules = shd.make_rules(cfg, mesh)
+        o_abs = opt_mod.abstract_opt_state(model.abstract_params())
+        zero_sh = opt_state_shardings(o_abs, model.param_dims(), rules,
+                                      mesh).mu
+
+    def _constrain_acc(gsum):
+        if zero_sh is None:
+            return gsum
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), gsum, zero_sh)
+
+    def train_step(params, opt_state, batch):
+        M = cfg.microbatches
+        if M > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+            def micro_step(acc, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc[1], grads)
+                return (acc[0] + loss, _constrain_acc(gsum)), None
+
+            acc0 = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            if cfg.scan_layers:
+                (loss, gsum), _ = jax.lax.scan(micro_step, acc0, micro)
+            else:  # unrolled for the cost probe
+                acc = acc0
+                for i in range(M):
+                    acc, _ = micro_step(acc, jax.tree.map(lambda x: x[i], micro))
+                loss, gsum = acc
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return loss, grads
+
+    def full_step(params, opt_state, batch):
+        loss, grads = train_step(params, opt_state, batch)
+        new_params, new_state, om = opt_mod.apply_update(
+            grads, opt_state, hp, pdt)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return full_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for one cell
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree, mesh, rules):
+    def one(key_dims, leaf):
+        return NamedSharding(mesh, shd.resolve_spec(key_dims, leaf.shape,
+                                                    rules, mesh))
+    return {k: one(BATCH_DIMS[k], v) for k, v in batch_tree.items()}
+
+
+class Cell(NamedTuple):
+    fn: Any                    # jit-able python callable
+    args: tuple                # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple              # donated arg indices
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               hp: Optional[opt_mod.OptConfig] = None) -> Cell:
+    """Assemble the lowering target for one (arch × shape × mesh) cell."""
+    model = Model(cfg)
+    rules = shd.make_rules(cfg, mesh)
+    hp = hp or opt_mod.OptConfig()
+
+    p_abs = model.abstract_params()
+    p_dims = model.param_dims()
+    p_sh = shd.tree_shardings(p_dims, p_abs, rules, mesh)
+    batch_abs = model.input_specs(shape)
+    b_sh = batch_shardings(batch_abs, mesh, rules)
+
+    if shape.kind == "train":
+        o_abs = opt_mod.abstract_opt_state(p_abs)
+        o_sh = opt_state_shardings(o_abs, p_dims, rules, mesh)
+        fn = make_train_step(model, hp, mesh)
+        metrics_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            {"loss": 0, "lr": 0, "grad_norm": 0})
+        return Cell(fn, (p_abs, o_abs, batch_abs),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh),
+                    donate=(0, 1))
+
+    cache_abs = model.cache_abstract(shape.global_batch, shape.seq_len)
+    cache_dims = model.cache_dims()
+    c_sh = {k: NamedSharding(mesh, shd.resolve_spec(cache_dims[k], v.shape,
+                                                    rules, mesh))
+            for k, v in cache_abs.items()}
+
+    if shape.kind == "prefill":
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache, mesh=mesh)
+        logits_sh = NamedSharding(mesh, shd.resolve_spec(
+            ("batch", "vocab"), (shape.global_batch, cfg.vocab), rules, mesh))
+        return Cell(prefill, (p_abs, batch_abs, cache_abs),
+                    (p_sh, b_sh, c_sh), (logits_sh, c_sh), donate=(2,))
+
+    def decode(params, batch, cache):
+        return model.decode_step(params, batch, cache, mesh=mesh)
+    tok_sh = NamedSharding(mesh, shd.resolve_spec(
+        ("batch",), (shape.global_batch,), rules, mesh))
+    return Cell(decode, (p_abs, batch_abs, cache_abs),
+                (p_sh, b_sh, c_sh), (tok_sh, c_sh), donate=(2,))
+
+
+def opt_state_shardings(o_abs, p_dims, rules, mesh):
+    def zero_sh(dims, leaf):
+        spec = shd.resolve_spec(dims, leaf.shape, rules, mesh)
+        # extend: shard first unsharded divisible dim over 'data' (ZeRO-1)
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update((e,) if isinstance(e, str) else tuple(e))
+        if "data" not in used and "data" in mesh.shape:
+            dsize = mesh.shape["data"]
+            for i, (e, size) in enumerate(zip(entries, leaf.shape)):
+                if e is None and size % dsize == 0 and size > 0:
+                    entries[i] = "data"
+                    break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return NamedSharding(mesh, P(*entries))
+
+    def tree_sh(tree):
+        return jax.tree.map(
+            zero_sh, p_dims, tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(d, (str, type(None))) for d in x))
+
+    return opt_mod.OptState(
+        master=tree_sh(o_abs.master), mu=tree_sh(o_abs.mu),
+        nu=tree_sh(o_abs.nu), step=NamedSharding(mesh, P()))

@@ -1,0 +1,33 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def split_by_tree(rng, tree):
+    """One PRNG key per leaf, deterministic in tree structure."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def assert_finite(tree, name="tree"):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            ok = bool(jnp.isfinite(leaf).all())
+            assert ok, f"non-finite values in {name}{jax.tree_util.keystr(path)}"

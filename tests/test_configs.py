@@ -1,0 +1,67 @@
+"""Assigned-architecture configs carry the exact published constants."""
+import pytest
+
+from repro.configs import ARCHS, all_configs, get_config
+
+EXPECT = {
+    "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                           n_kv_heads=4, d_ff=5632, vocab=32000),
+    "llama3-8b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+                      d_ff=14336, vocab=128256),
+    "glm4-9b": dict(n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+                    d_ff=13696, vocab=151552),
+    "stablelm-1.6b": dict(n_layers=24, d_model=2048, n_heads=32,
+                          n_kv_heads=32, d_ff=5632, vocab=100352),
+    "pixtral-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+                        d_ff=14336, vocab=131072),
+    "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                              n_kv_heads=4, d_ff=768, vocab=151936),
+    "llama4-scout-17b-a16e": dict(n_layers=48, d_model=5120, n_heads=40,
+                                  n_kv_heads=8, d_ff=8192, vocab=202048),
+    "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                        n_kv_heads=32, d_ff=8192, vocab=32000),
+    "seamless-m4t-medium": dict(n_layers=12, d_model=1024, n_heads=16,
+                                n_kv_heads=16, d_ff=4096, vocab=256206),
+    "rwkv6-7b": dict(n_layers=32, d_model=4096, d_ff=14336, vocab=65536),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECT))
+def test_exact_constants(name):
+    cfg = get_config(name)
+    for k, v in EXPECT[name].items():
+        assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+def test_all_archs_present():
+    assert len(ARCHS) == 10
+    cfgs = all_configs()
+    assert len(cfgs) == 10
+
+
+def test_moe_specs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.moe.n_experts == 128 and q.moe.top_k == 8
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.moe.n_experts == 16 and l4.moe.top_k == 1
+
+
+def test_ssm_specs():
+    z = get_config("zamba2-1.2b")
+    assert z.ssm.d_state == 64
+    assert z.family == "hybrid"
+    r = get_config("rwkv6-7b")
+    assert r.family == "ssm"
+
+
+def test_long500k_skip_policy():
+    from repro.configs.base import SHAPES_BY_NAME
+    long = SHAPES_BY_NAME["long_500k"]
+    runs = [a for a in ARCHS if get_config(a).supports_shape(long)[0]]
+    assert sorted(runs) == ["rwkv6_7b", "zamba2_1_2b"]
+
+
+def test_smoke_configs_are_small():
+    for a in ARCHS:
+        s = get_config(a).smoke()
+        assert s.d_model <= 64 and s.vocab <= 256 and s.n_layers <= 4

@@ -1,0 +1,116 @@
+"""Evaluation metrics: cross-checks vs scipy and known closed forms."""
+import numpy as np
+import pytest
+import scipy.stats
+
+from repro.core import metrics as M
+from repro.graph import ops as G
+from repro.graph.ops import Graph
+
+
+def _graph(seed=0, n=512, e=4000):
+    r = np.random.default_rng(seed)
+    w = np.arange(1, n + 1) ** -1.2
+    w = w / w.sum()
+    return Graph(r.choice(n, e, p=w).astype(np.int32),
+                 r.choice(n, e, p=w).astype(np.int32), n, n)
+
+
+def test_degree_dist_identical_is_one():
+    g = _graph()
+    assert M.degree_dist_similarity(g, g) == pytest.approx(1.0)
+    assert M.dcc(g, g) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_degree_dist_detects_difference():
+    g1 = _graph(0)
+    r = np.random.default_rng(1)
+    g2 = Graph(r.integers(0, 512, 4000).astype(np.int32),
+               r.integers(0, 512, 4000).astype(np.int32), 512, 512)
+    assert M.degree_dist_similarity(g1, g2) < 0.7
+
+
+def test_pearson_vs_scipy(rng):
+    x = rng.normal(0, 1, (300, 3))
+    x[:, 1] = x[:, 0] * 0.7 + rng.normal(0, 0.3, 300)
+    ours = M.pearson_matrix(x)
+    for i in range(3):
+        for j in range(3):
+            ref = scipy.stats.pearsonr(x[:, i], x[:, j])[0]
+            assert abs(ours[i, j] - ref) < 1e-8
+
+
+def test_theils_u_known_cases(rng):
+    x = rng.integers(0, 4, 1000)
+    assert M.theils_u(x, x) == pytest.approx(1.0)          # fully determined
+    y = rng.integers(0, 4, 1000)
+    assert M.theils_u(x, y) < 0.05                          # independent
+    # asymmetry: y = f(x) makes U(y|x)=1 but U(x|y)<1 when f not injective
+    y2 = x // 2
+    assert M.theils_u(y2, x) == pytest.approx(1.0, abs=1e-9)
+    assert M.theils_u(x, y2) < 1.0
+
+
+def test_correlation_ratio_bounds(rng):
+    cat = rng.integers(0, 3, 600)
+    cont = cat * 2.0 + rng.normal(0, 0.01, 600)
+    assert M.correlation_ratio(cat, cont) > 0.99
+    cont2 = rng.normal(0, 1, 600)
+    assert M.correlation_ratio(cat, cont2) < 0.15
+
+
+def test_js_divergence_bounds():
+    p = np.array([1.0, 0, 0, 0])
+    q = np.array([0, 0, 0, 1.0])
+    assert M.js_divergence(p, p) == pytest.approx(0.0, abs=1e-9)
+    assert M.js_divergence(p, q) == pytest.approx(np.log(2), rel=1e-3)
+
+
+def test_degree_feature_distance_directional():
+    g = _graph()
+    deg = np.asarray(G.out_degrees(g))[np.asarray(g.src)].astype(np.float64)
+    coupled = np.log1p(deg) + np.random.default_rng(0).normal(0, 0.05,
+                                                              g.n_edges)
+    rng = np.random.default_rng(1)
+    shuffled = rng.permutation(coupled)
+    d_same = M.degree_feature_distance(g, coupled, g, coupled)
+    d_shuf = M.degree_feature_distance(g, coupled, g, shuffled)
+    assert d_same < 1e-6
+    assert d_shuf > 0.05
+
+
+def test_powerlaw_exponent():
+    r = np.random.default_rng(0)
+    alpha = 2.5
+    d = r.zipf(alpha, 50000)                     # discrete power law
+    est = G.powerlaw_exponent(d, dmin=5)
+    assert abs(est - alpha) < 0.2, est
+
+
+def test_graph_statistics_triangle():
+    # K4 has 4 triangles, 12 wedges... (4 choose 3)=4 triangles
+    src = np.array([0, 0, 0, 1, 1, 2], np.int32)
+    dst = np.array([1, 2, 3, 2, 3, 3], np.int32)
+    g = Graph(src, dst, 4, 4)
+    assert G.triangle_count(g) == 4
+    assert G.wedge_count(g) == 12
+    assert G.global_clustering(g) == pytest.approx(1.0)
+    assert G.largest_connected_component(g) == 4
+
+
+def test_hop_plot_path_graph():
+    # path 0-1-2-3: from each node full reach by 3 hops
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3], np.int32)
+    g = Graph(src, dst, 4, 4)
+    hp = G.hop_plot(g, n_sources=4, max_hops=4)
+    assert hp[-1] == pytest.approx(1.0)
+    assert hp[0] == pytest.approx(0.25)
+    assert G.effective_diameter(hp) <= 3.0
+
+
+def test_gini_uniform_zero():
+    assert G.gini_coefficient(np.full(100, 7)) == pytest.approx(0.0, abs=1e-9)
+    skew = np.zeros(100)
+    skew[0] = 100
+    assert G.gini_coefficient(skew) > 0.95

@@ -1,0 +1,198 @@
+"""Model stack: per-arch smoke tests (reduced configs of the same family),
+sequence-mixer oracles (Mamba2/RWKV6 chunked vs recurrent), decode
+equivalence, MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models import moe as moe_mod
+from repro.models.params import init_params
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B=2, S=32):
+    rng = jax.random.PRNGKey(1)
+    if cfg.family == "encdec":
+        fr = S // 2
+        return {"frames": jax.random.normal(rng, (B, fr, cfg.d_model)),
+                "tokens": jnp.ones((B, S - fr), jnp.int32),
+                "labels": jnp.ones((B, S - fr), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.vlm.n_patches
+        return {"tokens": jnp.ones((B, S - p), jnp.int32),
+                "labels": jnp.ones((B, S - p), jnp.int32),
+                "patches": jax.random.normal(rng, (B, p, cfg.vlm.patch_dim))}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_loss_and_decode(arch):
+    """One loss + prefill + decode step on the reduced config: shapes OK,
+    everything finite."""
+    cfg = get_config(arch).smoke()
+    m = Model(cfg)
+    params = m.init_params(RNG)
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+    loss = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    assert 1.0 < float(loss) < 12.0, (arch, float(loss))
+
+    cache = m.init_cache(B, S)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    logits, cache = jax.jit(lambda p, b, c: m.prefill(p, b, c))(params, pre,
+                                                                cache)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    nxt, cache = jax.jit(lambda p, b, c: m.decode_step(p, b, c))(
+        params, {"tokens": tok}, cache)
+    assert nxt.shape == (B,)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-7b", "zamba2-1.2b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """prefill(t[:k]) + decode(t[k]) logits == full forward logits at k.
+    f32: the chunked-vs-stepwise orders differ, so bf16 noise compounds."""
+    cfg = get_config(arch).smoke().replace(dtype="float32")
+    m = Model(cfg)
+    params = m.init_params(RNG)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + 1), 0, cfg.vocab)
+
+    out_full = m.forward(params, {"tokens": toks})
+    cache = m.init_cache(B, S + 1)
+    _, cache = m.prefill(params, {"tokens": toks[:, :S]}, cache)
+    out_dec = m.forward(params, {"tokens": toks[:, S: S + 1]}, cache=cache)
+    a = np.asarray(out_full.logits[:, S].astype(jnp.float32))
+    b = np.asarray(out_dec.logits[:, 0].astype(jnp.float32))
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+def test_mamba_chunked_vs_recurrent_oracle():
+    cfg = get_config("zamba2-1.2b").smoke()
+    w = init_params(ssm_mod.mamba_defs(cfg), RNG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model)) * 0.5
+    y_chunk, _ = ssm_mod.mamba_block(w, x, cfg)
+    y_rec = ssm_mod.mamba_reference(w, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_chunked_vs_recurrent_oracle():
+    cfg = get_config("rwkv6-7b").smoke()
+    w = init_params(rwkv_mod.rwkv_defs(cfg), RNG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model)) * 0.5
+    y_chunk, _ = rwkv_mod.time_mix(w, x, cfg)
+    y_rec = rwkv_mod.wkv_reference(w, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_mamba_state_continuity():
+    """chunked prefill state == recurrent final state."""
+    cfg = get_config("zamba2-1.2b").smoke()
+    w = init_params(ssm_mod.mamba_defs(cfg), RNG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, cfg.d_model)) * 0.5
+    st0 = ssm_mod.init_ssm_state(cfg, 1)
+    _, st_chunk = ssm_mod.mamba_block(w, x, cfg, st0)
+    st = ssm_mod.init_ssm_state(cfg, 1)
+    for t in range(32):
+        _, st = ssm_mod._mamba_decode(w, x[:, t:t + 1], cfg, st)
+    np.testing.assert_allclose(np.asarray(st_chunk.state),
+                               np.asarray(st.state), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_chunk.conv_x),
+                               np.asarray(st.conv_x), rtol=1e-4, atol=1e-4)
+
+
+def test_moe_dispatch_invariants():
+    """Capacity respected; gates renormalized; dropped tokens get zeros."""
+    cfg = get_config("qwen3-moe-30b-a3b").smoke()
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    # distinct experts per token (as jax.lax.top_k guarantees)
+    scores = jax.random.normal(jax.random.PRNGKey(0), (2, 16, E))
+    top_e = jnp.argsort(-scores, axis=-1)[..., :k]
+    top_g = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (2, 16, k)))
+    C = 5
+    buf_tok, buf_gate = moe_mod._dispatch_buffers(top_e, top_g, 16, E, C)
+    assert buf_tok.shape == (2, E, C)
+    bt = np.asarray(buf_tok)
+    # every real slot points at a valid token; sentinel==16 marks empty
+    assert ((bt >= 0) & (bt <= 16)).all()
+    # no token appears twice within one expert
+    for g in range(2):
+        for e in range(E):
+            real = bt[g, e][bt[g, e] < 16]
+            assert len(np.unique(real)) == len(real)
+
+
+def test_moe_tp_forward_balance():
+    cfg = get_config("qwen3-moe-30b-a3b").smoke()
+    w = init_params(moe_mod.moe_defs(cfg), RNG, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model))
+    out, aux = moe_mod.moe_ffn_tp(w, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) > 0.5   # load-balance loss near E·(1/E)·1 ≈ 1
+
+
+def test_vlm_patch_prefix_changes_text_logits():
+    cfg = get_config("pixtral-12b").smoke()
+    m = Model(cfg)
+    params = m.init_params(RNG)
+    toks = jnp.ones((1, 8), jnp.int32)
+    p1 = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.vlm.n_patches,
+                                                   cfg.vlm.patch_dim))
+    p2 = p1 + 1.0
+    l1 = m.forward(params, {"tokens": toks, "patches": p1}).logits
+    l2 = m.forward(params, {"tokens": toks, "patches": p2}).logits
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_encdec_cross_attention_uses_frames():
+    cfg = get_config("seamless-m4t-medium").smoke()
+    m = Model(cfg)
+    params = m.init_params(RNG)
+    toks = jnp.ones((1, 8), jnp.int32)
+    f1 = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    l1 = m.forward(params, {"tokens": toks, "frames": f1}).logits
+    l2 = m.forward(params, {"tokens": toks, "frames": f1 * 2}).logits
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_scan_equals_unrolled():
+    """cfg.scan_layers=False (cost-probe path) is numerically identical."""
+    for arch in ["tinyllama-1.1b", "qwen3-moe-30b-a3b", "zamba2-1.2b",
+                 "rwkv6-7b"]:
+        cfg = get_config(arch).smoke().replace(dtype="float32")
+        m = Model(cfg)
+        params = m.init_params(RNG)
+        batch = _batch_for(cfg, 2, 16 if cfg.family != "vlm" else 24)
+        l1 = m.loss(params, batch)
+        m2 = Model(cfg.replace(scan_layers=False))
+        l2 = m2.loss(params, batch)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4), arch
+
+
+def test_flash_attn_impl_matches_einsum():
+    """cfg.attn_impl='flash' (Pallas kernel, interpret on CPU) must match
+    the einsum path bit-for-bit-ish in f32."""
+    cfg_e = get_config("llama3-8b").smoke().replace(dtype="float32")
+    cfg_f = cfg_e.replace(attn_impl="flash")
+    m_e, m_f = Model(cfg_e), Model(cfg_f)
+    params = m_e.init_params(RNG)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                                     cfg_e.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 128), 0,
+                                     cfg_e.vocab),
+    }
+    assert abs(float(m_e.loss(params, batch))
+               - float(m_f.loss(params, batch))) < 1e-4

@@ -1,0 +1,135 @@
+"""Structure generator: fitting, sampling, chunking, noise — incl. property
+tests (hypothesis) on the paper's invariants."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmat
+from repro.core.structure import (KroneckerFit, combine, estimate_ratios_mle,
+                                  expected_degree_hist, fit_structure,
+                                  noisy_thetas)
+from repro.graph.ops import Graph, in_degrees, out_degrees
+
+
+def _sample_fit(fit, seed=0, E=None):
+    src, dst = rmat.sample_graph(jax.random.PRNGKey(seed), fit, n_edges=E)
+    return np.asarray(src), np.asarray(dst)
+
+
+def test_mle_recovers_known_theta():
+    """Sampling from a known θ then MLE-estimating recovers it closely."""
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=12, m=12, E=200000)
+    src, dst = _sample_fit(fit)
+    est = estimate_ratios_mle(src, dst, 12, 12)
+    np.testing.assert_allclose(est, [0.5, 0.2, 0.2, 0.1], atol=0.01)
+
+
+def test_mle_rectangular():
+    fit = KroneckerFit(a=0.45, b=0.25, c=0.2, d=0.1, n=12, m=9, E=100000)
+    src, dst = _sample_fit(fit)
+    assert src.max() < 2 ** 12 and dst.max() < 2 ** 9
+    est = estimate_ratios_mle(src, dst, 12, 9)
+    # square levels only; ratios should still match
+    assert abs(est[0] / est[1] - 0.45 / 0.25) < 0.15
+
+
+def test_expected_degree_hist_matches_empirical():
+    """Eq. 7 closed form vs an actual sample."""
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=10, m=10, E=40000)
+    src, dst = _sample_fit(fit)
+    g = Graph(src, dst, 2 ** 10, 2 ** 10)
+    emp = np.bincount(np.asarray(out_degrees(g)), minlength=200)[:200]
+    ks = np.arange(200)
+    pred = expected_degree_hist(fit.p, fit.n, fit.E, 199, ks)
+    # compare in log space over mid-range degrees (tails are noisy)
+    sel = (emp > 5) & (ks > 0)
+    err = np.abs(np.log1p(pred[sel]) - np.log1p(emp[sel])).mean()
+    assert err < 0.5, err
+
+
+def test_fit_structure_roundtrip():
+    """fit → generate → refit gives consistent marginals."""
+    true = KroneckerFit(a=0.55, b=0.18, c=0.17, d=0.1, n=11, m=11, E=60000)
+    src, dst = _sample_fit(true)
+    g = Graph(src, dst, 2 ** 11, 2 ** 11)
+    fit = fit_structure(g)
+    assert abs(fit.p - true.p) < 0.08, (fit.p, true.p)
+    assert abs(fit.q - true.q) < 0.08, (fit.q, true.q)
+
+
+def test_chunked_equals_unchunked_distribution():
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=10, m=10, E=50000)
+    s1, d1 = rmat.sample_graph(jax.random.PRNGKey(0), fit)
+    s2, d2 = rmat.sample_graph_chunked(jax.random.PRNGKey(0), fit, k_pref=2)
+    assert len(s2) == fit.E                      # exact edge count
+    # same bit-pair statistics
+    e1 = estimate_ratios_mle(np.asarray(s1), np.asarray(d1), 10, 10)
+    e2 = estimate_ratios_mle(np.asarray(s2), np.asarray(d2), 10, 10)
+    np.testing.assert_allclose(e1, e2, atol=0.02)
+
+
+def test_chunks_are_id_disjoint():
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=10, m=10, E=20000)
+    chunks = rmat.chunk_plan(fit, 2)
+    seen = set()
+    for ck in chunks:
+        assert (ck.src_prefix, ck.dst_prefix) not in seen
+        seen.add((ck.src_prefix, ck.dst_prefix))
+        s, d = rmat.sample_chunk(jax.random.PRNGKey(ck.index), fit, ck, 2)
+        s, d = np.asarray(s), np.asarray(d)
+        # all edges carry the chunk's prefix
+        assert (s >> (fit.n - 2) == ck.src_prefix).all()
+        assert (d >> (fit.m - 2) == ck.dst_prefix).all()
+    assert sum(c.n_edges for c in chunks) == fit.E
+
+
+def test_noise_preserves_simplex():
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=8, m=8, E=1000,
+                       noise=0.05)
+    th = noisy_thetas(fit, np.random.default_rng(0))
+    np.testing.assert_allclose(th.sum(1), 1.0, atol=1e-6)
+    assert (th > 0).all()
+    # noise varies across levels
+    assert np.std(th[:, 0]) > 0
+
+
+def test_scaling_math():
+    fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=10, m=9, E=1000)
+    s2 = fit.scaled(2)                 # density preserving: E×4
+    assert (s2.n, s2.m, s2.E) == (11, 10, 4000)
+    s2l = fit.scaled(2, density_preserving=False)
+    assert s2l.E == 2000
+
+
+@given(a=st.floats(0.3, 0.7), rb=st.floats(0.5, 5.0), q=st.floats(0.3, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_combine_is_valid_simplex(a, rb, q):
+    """Property: combine() always returns a valid probability 4-simplex;
+    p = a+b (Eq. 4) is preserved whenever no simplex projection fires."""
+    p = a
+    th = combine(p, q, rb)
+    assert all(x > 0 for x in th)
+    assert abs(sum(th) - 1.0) < 1e-6
+    if p + q < 0.95:                        # away from the projection region
+        assert abs((th[0] + th[1]) - p) < 1e-6      # p = a + b
+
+
+@given(seed=st.integers(0, 2 ** 16), n=st.integers(3, 8), m=st.integers(3, 8))
+@settings(max_examples=20, deadline=None)
+def test_sample_bounds_property(seed, n, m):
+    """Property: sampled ids are always within the 2^n × 2^m grid."""
+    fit = KroneckerFit(a=0.4, b=0.25, c=0.2, d=0.15, n=n, m=m, E=512)
+    src, dst = _sample_fit(fit, seed)
+    assert src.min() >= 0 and src.max() < 2 ** n
+    assert dst.min() >= 0 and dst.max() < 2 ** m
+
+
+def test_marginal_p_q_statistics():
+    """p = P(src top-bit == 0), q = P(dst top-bit == 0) (Eq. 4)."""
+    fit = KroneckerFit(a=0.5, b=0.25, c=0.15, d=0.1, n=12, m=12, E=100000)
+    src, dst = _sample_fit(fit)
+    top_src0 = 1 - (src >> 11).mean()
+    top_dst0 = 1 - (dst >> 11).mean()
+    assert abs(top_src0 - fit.p) < 0.01
+    assert abs(top_dst0 - fit.q) < 0.01
