@@ -22,6 +22,7 @@ TABLES = [
     "fig8_throughput",
     "gnn_throughput",
     "roofline",
+    "datastream_throughput",
 ]
 
 

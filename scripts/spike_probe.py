@@ -8,8 +8,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+import sys
+sys.path.insert(0, "src")
+from repro.utils import make_mesh_compat
+mesh = make_mesh_compat((4, 4), ("data", "model"))
 
 D, H, KV, DFF, V = 256, 8, 4, 512, 1024
 HD = D // H
@@ -111,7 +113,8 @@ def lower_cell(L, scan):
             shapes(L), tok, tok)
         co = lo.compile()
     dt = time.time() - t0
-    ca = co.cost_analysis()
+    from repro.utils import cost_analysis_compat
+    ca = cost_analysis_compat(co)
     hlo = co.as_text()
     colls = Counter(re.findall(
         r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(", hlo))

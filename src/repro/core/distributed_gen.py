@@ -24,6 +24,30 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.rmat import _level_bits
 
 
+from repro.utils import shard_map_compat as _shard_map
+
+
+def step_seeds(base_seed: int, step: int, n_dev: int) -> np.ndarray:
+    """Step-indexed per-device seeds (splitmix64 finalizer, int32 range).
+
+    Deterministic in ``(base_seed, step)`` and disjoint across devices and
+    steps: generation step *s* can be (re)run in isolation — after a crash,
+    on a different worker, in any order — and produce the same edges, which
+    is what ``datastream.DatasetJob`` resumption relies on.
+    """
+    with np.errstate(over="ignore"):   # uint64 wraparound is the point
+        mix = (np.uint64(base_seed) * np.uint64(0x9E3779B97F4A7C15)
+               + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
+               + np.arange(n_dev, dtype=np.uint64) *
+               np.uint64(0x94D049BB133111EB))
+        mix ^= mix >> np.uint64(30)
+        mix *= np.uint64(0xBF58476D1CE4E5B9)
+        mix ^= mix >> np.uint64(27)
+        mix *= np.uint64(0x94D049BB133111EB)
+        mix ^= mix >> np.uint64(31)
+    return (mix & np.uint64(0x7FFFFFFF)).astype(np.int32)
+
+
 def device_generate(thetas, seeds, n: int, m: int, edges_per_device: int,
                     mesh, dtype=jnp.int32, uniforms=None):
     """shard_map over every mesh axis: device i samples its chunk with its
@@ -64,13 +88,13 @@ def device_generate(thetas, seeds, n: int, m: int, edges_per_device: int,
         return src[None], dst[None]
 
     if uniforms is not None:
-        fn = jax.shard_map(
+        fn = _shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(axes), P(axes)),
             out_specs=(P(axes), P(axes)),
             check_vma=False)
         return fn(thetas, seeds, uniforms)
-    fn = jax.shard_map(
+    fn = _shard_map(
         lambda t, s: local(t, s, None), mesh=mesh,
         in_specs=(P(), P(axes)),
         out_specs=(P(axes), P(axes)),

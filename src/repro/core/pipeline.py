@@ -117,3 +117,40 @@ class SyntheticGraphPipeline:
         cont_s, cat_s = self.aligner.align(g, cont_s, cat_s, rng)
         self.timings.gen_align_s = time.time() - t0
         return g, cont_s, cat_s
+
+    # -- generate to disk (repro.datastream) -------------------------------
+    def generate_streamed(self, out_dir: str, seed: int = 0,
+                          scale_nodes: int = 1,
+                          density_preserving: bool = True,
+                          shard_edges: int = 1 << 20,
+                          k_pref: Optional[int] = None,
+                          include_features: bool = True,
+                          double_buffered: bool = True,
+                          resume: bool = False, mode: str = "chunks"):
+        """Materialize the generated graph to a sharded on-disk dataset
+        instead of host memory (see ``repro.datastream``) — the path for
+        outputs that exceed RAM.  Returns a ``ShardedGraphDataset``.
+
+        Features/alignment ride along per shard when the pipeline is
+        fitted with edge features; node-feature pipelines stream structure
+        only (cross-shard node identity is not streamed).
+        """
+        from repro.datastream import DatasetJob, FeatureSpec
+
+        if self.struct_kind != "kronecker":
+            raise ValueError("streamed generation needs the kronecker "
+                             f"structure generator, not {self.struct_kind}")
+        fit: KroneckerFit = self.struct.scaled(scale_nodes,
+                                               density_preserving)
+        features = None
+        if include_features and hasattr(self, "features") \
+                and self.feature_kind == "edge":
+            features = FeatureSpec(self.features,
+                                   getattr(self, "aligner", None))
+        t0 = time.time()
+        job = DatasetJob(fit, out_dir, shard_edges=shard_edges, seed=seed,
+                         k_pref=k_pref, double_buffered=double_buffered,
+                         mode=mode, features=features)
+        job.run(resume=resume)
+        self.timings.gen_struct_s = time.time() - t0
+        return job.dataset()

@@ -56,12 +56,51 @@ def sample_edges(key, thetas, n: int, m: int, n_edges: int,
     return src, dst
 
 
+_NOISE_SALT = 0x5eed
+
+
+def _noise_rng_from_key(key) -> np.random.Generator:
+    """Deterministic numpy Generator derived from a JAX key — distinct keys
+    get distinct θ-noise, the same key always gets the same noise."""
+    seed = int(jax.random.randint(jax.random.fold_in(key, _NOISE_SALT), (),
+                                  0, np.iinfo(np.int32).max))
+    return np.random.default_rng(seed)
+
+
+def derive_thetas(fit: KroneckerFit,
+                  rng: Optional[np.random.Generator] = None,
+                  key=None) -> np.ndarray:
+    """Canonical (levels, 4) θ derivation — the ONE place θ-noise is drawn.
+
+    With ``fit.noise == 0`` the result is the deterministic tiled base and no
+    RNG state is consumed.  With noise, the per-level draw comes from ``rng``
+    (or a Generator derived from ``key``) — callers must derive θ once and
+    thread it through repeated ``sample_chunk`` calls; deriving inside each
+    call would silently reuse identical noise across chunks.
+    """
+    if fit.noise <= 0:
+        return np.tile(np.array([fit.a, fit.b, fit.c, fit.d]),
+                       (max(fit.n, fit.m), 1))
+    if rng is None:
+        if key is None:
+            raise ValueError("fit.noise > 0: pass rng= or key= so θ-noise "
+                             "is derived explicitly (no hidden default rng)")
+        rng = _noise_rng_from_key(key)
+    return noisy_thetas(fit, rng)
+
+
+def chunk_key(key, chunk_index: int):
+    """Index-stable per-chunk PRNG key: depends only on (key, chunk.index),
+    never on how many chunks the plan produced or the order they run in —
+    the property datastream resumption relies on."""
+    return jax.random.fold_in(key, chunk_index)
+
+
 def sample_graph(key, fit: KroneckerFit, n_edges: Optional[int] = None,
                  rng: Optional[np.random.Generator] = None,
                  dtype=jnp.int32):
     """One-shot (unchunked) generation from a fit."""
-    rng = rng or np.random.default_rng(0)
-    thetas = jnp.asarray(noisy_thetas(fit, rng), jnp.float32)
+    thetas = jnp.asarray(derive_thetas(fit, rng=rng, key=key), jnp.float32)
     E = n_edges if n_edges is not None else fit.E
     return sample_edges(key, thetas, fit.n, fit.m, E, dtype)
 
@@ -110,13 +149,21 @@ def chunk_plan(fit: KroneckerFit, k_pref: int,
 
 
 def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
-                 thetas=None, rng: Optional[np.random.Generator] = None,
-                 dtype=jnp.int32):
+                 thetas=None, dtype=jnp.int32):
     """Sample one chunk: suffix levels from θ_gen, prefix bits prepended.
-    Guaranteed id-disjoint across chunks (distinct prefixes)."""
-    rng = rng or np.random.default_rng(0)
+    Guaranteed id-disjoint across chunks (distinct prefixes).
+
+    ``thetas`` must be derived ONCE by the caller (``derive_thetas``) and
+    threaded through every chunk of a generation; for noiseless fits it is
+    optional (the deterministic base is used).
+    """
     if thetas is None:
-        thetas = noisy_thetas(fit, rng)
+        if fit.noise > 0:
+            raise ValueError(
+                "fit.noise > 0: derive θ once with derive_thetas() in the "
+                "caller and pass thetas= — a per-call default rng would "
+                "silently reuse identical θ-noise across chunks")
+        thetas = derive_thetas(fit)
     suffix = jnp.asarray(thetas[k_pref:], jnp.float32)
     n_s, m_s = fit.n - k_pref, fit.m - k_pref
     src, dst = sample_edges(key, suffix, n_s, m_s, chunk.n_edges, dtype)
@@ -127,15 +174,22 @@ def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
 
 def sample_graph_chunked(key, fit: KroneckerFit, k_pref: int = 2,
                          rng: Optional[np.random.Generator] = None,
+                         thetas: Optional[np.ndarray] = None,
                          dtype=jnp.int32):
-    """Full graph via chunk concatenation (memory-bounded generation)."""
-    rng = rng or np.random.default_rng(0)
-    thetas = noisy_thetas(fit, rng)
+    """Full graph via chunk concatenation (memory-bounded generation).
+
+    θ-noise is derived exactly once (from ``rng`` or, failing that, from
+    ``key``) and threaded through every chunk; per-chunk keys are
+    index-stable ``chunk_key`` fold-ins, so this matches the streamed
+    ``repro.datastream`` path chunk-for-chunk.
+    """
+    if thetas is None:
+        thetas = derive_thetas(fit, rng=rng, key=key)
     chunks = chunk_plan(fit, k_pref, thetas)
-    keys = jax.random.split(key, len(chunks))
     srcs, dsts = [], []
-    for ck, k in zip(chunks, keys):
-        s, d = sample_chunk(k, fit, ck, k_pref, thetas, rng, dtype)
+    for ck in chunks:
+        s, d = sample_chunk(chunk_key(key, ck.index), fit, ck, k_pref,
+                            thetas, dtype)
         srcs.append(s)
         dsts.append(d)
     return jnp.concatenate(srcs), jnp.concatenate(dsts)

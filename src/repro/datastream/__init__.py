@@ -1,0 +1,29 @@
+"""Streaming dataset materialization (generation → disk → training).
+
+The paper claims generation at trillion-edge scale, but the in-memory
+paths (``rmat.sample_graph*``, ``SyntheticGraphPipeline.generate``) cap
+out at what fits in host RAM.  This subsystem turns the chunked sampler
+into a dataset *service*: a deterministic chunk scheduler, a sharded
+on-disk edge/feature store written through a double-buffered
+device→host pump, a manifest-driven reader, and a resumable job API.
+
+    from repro.datastream import DatasetJob, ShardedGraphDataset
+
+    job = DatasetJob(fit, out_dir="/data/ds", shard_edges=1 << 20)
+    job.run()                       # or job.resume() after an interrupt
+    ds = ShardedGraphDataset("/data/ds")
+    for block in ds:                # bounded-memory iteration
+        train_step(block.src, block.dst, block.cont)
+"""
+from repro.datastream.reader import ShardBlock, ShardedGraphDataset
+from repro.datastream.scheduler import ChunkScheduler, ShardPlan, auto_k_pref
+from repro.datastream.service import DatasetJob, FeatureSpec
+from repro.datastream.writer import (MANIFEST_NAME, Manifest, ShardRecord,
+                                     ShardWriter, pump_chunks)
+
+__all__ = [
+    "ChunkScheduler", "ShardPlan", "auto_k_pref",
+    "Manifest", "ShardRecord", "ShardWriter", "pump_chunks", "MANIFEST_NAME",
+    "ShardedGraphDataset", "ShardBlock",
+    "DatasetJob", "FeatureSpec",
+]

@@ -1,0 +1,314 @@
+"""The ``DatasetJob`` API: plan → run → resume → verify.
+
+Wires the ``ChunkScheduler`` and ``ShardWriter`` to either
+
+* ``mode="chunks"`` — the local chunked sampler (``rmat.sample_chunk``),
+  one shard = a run of id-disjoint prefix chunks; or
+* ``mode="device_steps"`` — ``core.distributed_gen.device_generate`` over
+  the full device mesh, one shard = one generation step with
+  step-indexed seeds (resumption-deterministic).  NOTE: this is the
+  pod-scale *throughput* path (paper App. 10's zero-collective design):
+  every device emits the same edge count under its own src prefix, so
+  the top ``log2(n_dev)`` src levels are uniform rather than
+  θ-distributed.  Use ``mode="chunks"`` (θ-weighted chunk plan) when
+  distributional fidelity of the full graph matters.
+
+Feature generation + alignment plug in *per shard* (``FeatureSpec``): the
+fitted feature generator samples exactly the shard's edge count, and the
+aligner runs against a shard-local id-compacted subgraph, so attribute
+memory never exceeds one shard.  Every shard is a pure function of
+``(fit, seed, shard_id)`` — resuming a killed job regenerates only the
+missing shards, byte-identical to an uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmat
+from repro.core.structure import KroneckerFit
+from repro.datastream.reader import ShardedGraphDataset
+from repro.datastream.scheduler import ChunkScheduler
+from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter,
+                                     pump_chunks)
+from repro.graph.ops import Graph
+
+_FEATURE_SALT = 0xFEA7
+
+
+@dataclasses.dataclass
+class FeatureSpec:
+    """Per-shard feature generation: a *fitted* generator (+ optional
+    fitted aligner).  Only edge features stream (node features would need
+    cross-shard node identity; see reader.batches for training access)."""
+    generator: Any                      # .sample(rng, n) -> (cont, cat)
+    aligner: Any = None                 # .align(g, cont, cat, rng)
+
+    def describe(self) -> dict:
+        schema = getattr(self.generator, "schema", None)
+        if schema is None:
+            return {"n_cont": None, "cat_cards": None}
+        return {"n_cont": int(schema.n_cont),
+                "cat_cards": [int(c) for c in schema.cat_cards]}
+
+    def sample_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
+                         dst: np.ndarray, bipartite: bool):
+        """Deterministic per-shard draw + shard-local alignment.
+
+        Alignment uses structural features of the id-compacted shard
+        subgraph (degrees/PageRank *within* the shard) — a bounded-memory
+        approximation of the global §3.4 alignment.
+        """
+        rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
+        cont, cat = self.generator.sample(rng, len(src))
+        if self.aligner is not None and len(src):
+            g_local = _compact_subgraph(src, dst, bipartite)
+            cont, cat = self.aligner.align(g_local, cont, cat, rng)
+        return cont, cat
+
+
+def _compact_subgraph(src: np.ndarray, dst: np.ndarray,
+                      bipartite: bool) -> Graph:
+    """Remap a shard's global ids onto a dense local id space (≤ 2E nodes)
+    so per-node structural features stay shard-sized."""
+    if bipartite:
+        su, si = np.unique(src, return_inverse=True)
+        du, di = np.unique(dst, return_inverse=True)
+        return Graph(si.astype(np.int32), di.astype(np.int32),
+                     len(su), len(du), bipartite=True)
+    ids = np.unique(np.concatenate([src, dst]))
+    si = np.searchsorted(ids, src).astype(np.int32)
+    di = np.searchsorted(ids, dst).astype(np.int32)
+    return Graph(si, di, len(ids), len(ids), bipartite=False)
+
+
+def _edge_dtype(fit: KroneckerFit):
+    bits = max(fit.n, fit.m)
+    if bits <= 31:
+        return jnp.int32
+    if not jax.config.jax_enable_x64:
+        raise ValueError(
+            f"fit needs {bits}-bit node ids; enable jax x64 "
+            "(JAX_ENABLE_X64=1) to generate above 2^31 nodes")
+    return jnp.int64
+
+
+class DatasetJob:
+    """Resumable streaming materialization of one synthetic graph."""
+
+    def __init__(self, fit: KroneckerFit, out_dir: str,
+                 shard_edges: int = 1 << 20, seed: int = 0,
+                 k_pref: Optional[int] = None, num_workers: int = 1,
+                 double_buffered: bool = True, mode: str = "chunks",
+                 features: Optional[FeatureSpec] = None):
+        assert mode in ("chunks", "device_steps"), mode
+        self.fit = fit
+        self.out_dir = out_dir
+        self.shard_edges = int(shard_edges)
+        self.seed = int(seed)
+        self.num_workers = int(num_workers)
+        self.double_buffered = double_buffered
+        self.mode = mode
+        self.features = features
+        self.dtype = _edge_dtype(fit)
+        self.scheduler = ChunkScheduler(
+            fit, shard_edges=self.shard_edges, k_pref=k_pref,
+            num_workers=self.num_workers, seed=self.seed)
+        self.k_pref = self.scheduler.k_pref
+
+    # -- plan --------------------------------------------------------------
+    def plan(self, overwrite: bool = False) -> Manifest:
+        """Build (and persist) the manifest with every shard pending."""
+        if Manifest.exists(self.out_dir) and not overwrite:
+            raise FileExistsError(
+                f"{self.out_dir} already has a manifest — pass resume=True "
+                "to DatasetJob.run (or overwrite=True to replan)")
+        if self.mode == "chunks":
+            shards = [ShardRecord(s.shard_id, s.stem,
+                                  list(s.chunk_indices), s.n_edges,
+                                  worker=s.worker)
+                      for s in self.scheduler.shards]
+        else:
+            shards = self._device_step_records()
+        manifest = Manifest(
+            fit=dataclasses.asdict(self.fit), seed=self.seed,
+            k_pref=self.k_pref, shard_edges=self.shard_edges,
+            num_workers=self.num_workers,
+            dtype=np.dtype(self.dtype).name,
+            total_edges=self.fit.E, n_src=2 ** self.fit.n,
+            n_dst=2 ** self.fit.m, bipartite=self.fit.bipartite,
+            theta=[[float(x) for x in row] for row in self.scheduler.thetas],
+            theta_digest=self.scheduler.theta_digest, mode=self.mode,
+            n_dev=(len(jax.devices()) if self.mode == "device_steps"
+                   else None),
+            features=self.features.describe() if self.features else None,
+            shards=shards)
+        os.makedirs(self.out_dir, exist_ok=True)
+        manifest.save(self.out_dir)
+        return manifest
+
+    def _device_step_records(self) -> List[ShardRecord]:
+        step_edges = self.shard_edges
+        n_steps = max(1, math.ceil(self.fit.E / step_edges))
+        recs = []
+        left = self.fit.E
+        for s in range(n_steps):
+            n_e = min(step_edges, left)
+            left -= n_e
+            recs.append(ShardRecord(s, f"shard-{s:05d}", [], n_e))
+        return recs
+
+    # -- run / resume ------------------------------------------------------
+    def run(self, resume: bool = False, max_shards: Optional[int] = None,
+            worker: Optional[int] = None) -> Manifest:
+        """Materialize pending shards.  ``max_shards`` bounds this call
+        (simulating preemption / incremental progress); ``worker`` restricts
+        to one worker's queue so N processes can run disjoint shard sets."""
+        if resume and Manifest.exists(self.out_dir):
+            manifest = self._load_validated()
+        else:
+            manifest = self.plan(overwrite=resume)
+        writer = ShardWriter(self.out_dir, manifest)
+        if resume:
+            # distrust 'done' records whose files are missing/short
+            for rec in manifest.shards:
+                if rec.status == "done" and \
+                        not writer.shard_ok_on_disk(rec):
+                    rec.status = "pending"
+        by_worker = {s.shard_id: s.worker
+                     for s in self.scheduler.shards} \
+            if self.mode == "chunks" else {}
+        n_done = 0
+        for rec in manifest.shards:
+            if rec.status == "done":
+                continue
+            if worker is not None and by_worker.get(rec.shard_id, 0) != worker:
+                continue
+            if max_shards is not None and n_done >= max_shards:
+                break
+            arrays = (self._generate_shard_chunks(rec)
+                      if self.mode == "chunks"
+                      else self._generate_shard_device_step(rec))
+            if self.features is not None:
+                cont, cat = self.features.sample_for_shard(
+                    self.seed, rec.shard_id, arrays["src"], arrays["dst"],
+                    self.fit.bipartite)
+                arrays["cont"] = np.asarray(cont, np.float32)
+                arrays["cat"] = np.asarray(cat, np.int32)
+            writer.write_shard(rec.shard_id, arrays)
+            n_done += 1
+        writer.checkpoint()
+        return manifest
+
+    def resume(self, max_shards: Optional[int] = None,
+               worker: Optional[int] = None) -> Manifest:
+        return self.run(resume=True, max_shards=max_shards, worker=worker)
+
+    def verify(self, deep: bool = True) -> List[str]:
+        """Integrity report of what is on disk (empty list == sound)."""
+        return ShardedGraphDataset(self.out_dir,
+                                   allow_partial=True).verify(deep=deep)
+
+    def dataset(self, **kwargs) -> ShardedGraphDataset:
+        return ShardedGraphDataset(self.out_dir, **kwargs)
+
+    # -- generation backends ----------------------------------------------
+    def _generate_shard_chunks(self, rec: ShardRecord
+                               ) -> Dict[str, np.ndarray]:
+        """Double-buffered chunk loop into a preallocated shard buffer."""
+        sched = self.scheduler
+        np_dtype = np.dtype(self.dtype)
+        src_buf = np.empty(rec.n_edges, np_dtype)
+        dst_buf = np.empty(rec.n_edges, np_dtype)
+        chunks = [sched.chunk(i) for i in rec.chunk_indices]
+        offsets = dict(zip(rec.chunk_indices,
+                           np.cumsum([0] + [c.n_edges for c in chunks])))
+
+        def dispatch(ck):
+            return rmat.sample_chunk(sched.key_for(ck), self.fit, ck,
+                                     self.k_pref, sched.thetas,
+                                     dtype=self.dtype)
+
+        def flush(ck, host):
+            s, d = host
+            off = offsets[ck.index]
+            src_buf[off: off + ck.n_edges] = s
+            dst_buf[off: off + ck.n_edges] = d
+
+        pump_chunks(chunks, dispatch, flush,
+                    double_buffered=self.double_buffered)
+        return {"src": src_buf, "dst": dst_buf}
+
+    def _device_step_setup(self):
+        """Build the mesh + jitted step function once per job: every step
+        shares shapes, so the shard_map trace/compile is paid a single
+        time and steps differ only in their seed vector."""
+        if not hasattr(self, "_dev_step"):
+            from jax.sharding import Mesh
+
+            from repro.core.distributed_gen import device_generate
+
+            mesh = Mesh(np.array(jax.devices()), ("d",))
+            n_dev = mesh.size
+            k_dev = int(np.log2(n_dev))
+            if 2 ** k_dev != n_dev:
+                raise ValueError(
+                    f"device count {n_dev} must be a power of two")
+            n_loc = self.fit.n - k_dev
+            epd = math.ceil(self.shard_edges / n_dev)
+            # full θ rows: the level loop below runs max(n_loc, m) levels
+            # (dst keeps all m levels; only src loses k_dev to the device
+            # prefix), so offsetting rows by k_dev would both starve the
+            # last k_dev dst levels and misalign the square levels.
+            thetas = jnp.asarray(self.scheduler.thetas, jnp.float32)
+
+            @jax.jit
+            def step(seeds):
+                return device_generate(thetas, seeds, n_loc, self.fit.m,
+                                       epd, mesh, dtype=self.dtype)
+
+            self._dev_step = (step, n_dev)
+        return self._dev_step
+
+    def _generate_shard_device_step(self, rec: ShardRecord
+                                    ) -> Dict[str, np.ndarray]:
+        """One mesh-wide generation step == one shard; the step index (==
+        shard id) seeds the per-device streams, so any step can be
+        regenerated in isolation."""
+        from repro.core.distributed_gen import step_seeds
+
+        step, n_dev = self._device_step_setup()
+        seeds = step_seeds(self.seed, rec.shard_id, n_dev)
+        src, dst = step(jnp.asarray(seeds))
+        src = np.asarray(jax.device_get(src)).reshape(-1)
+        dst = np.asarray(jax.device_get(dst)).reshape(-1)
+        return {"src": src[: rec.n_edges], "dst": dst[: rec.n_edges]}
+
+    # -- resume validation -------------------------------------------------
+    def _load_validated(self) -> Manifest:
+        manifest = Manifest.load(self.out_dir)
+        want = {"fit": dataclasses.asdict(self.fit), "seed": self.seed,
+                "k_pref": self.k_pref, "shard_edges": self.shard_edges,
+                "mode": self.mode,
+                "theta_digest": self.scheduler.theta_digest,
+                # step seeds and per-device shapes depend on mesh size
+                "n_dev": (len(jax.devices())
+                          if self.mode == "device_steps" else None),
+                # a resumed job must produce the same columns per shard
+                "features": (self.features.describe()
+                             if self.features else None)}
+        have = {k: getattr(manifest, k) for k in want}
+        if have != want:
+            diffs = {k: (have[k], want[k]) for k in want
+                     if have[k] != want[k]}
+            raise ValueError(
+                f"manifest at {self.out_dir} was written by a different "
+                f"job configuration; refusing to resume (mismatch: "
+                f"{sorted(diffs)})")
+        return manifest

@@ -1,0 +1,273 @@
+"""Sharded on-disk edge/feature store + the double-buffered write pump.
+
+Layout of a dataset directory::
+
+    manifest.json                  # provenance + per-shard records
+    shard-00000.src.npy            # (n_edges,) int32/int64 source ids
+    shard-00000.dst.npy            # (n_edges,) destination ids
+    shard-00000.cont.npy           # optional (n_edges, n_cont) float32
+    shard-00000.cat.npy            # optional (n_edges, n_cat) int32
+
+Shard files are plain ``.npy`` (fixed-record, mmap-able) written
+atomically (tmp + ``os.replace``).  Progress durability is O(1) per
+shard: each completion appends one JSON line to ``progress.jsonl`` (a
+full manifest rewrite per shard would be O(n_shards²) at the scale this
+subsystem targets); the manifest itself is compacted — rewritten
+atomically and the journal truncated — every ``checkpoint_every`` shards
+and at the end of a run.  ``Manifest.load`` replays any surviving
+journal, so a killed job loses at most the shard in flight.
+``pump_chunks`` is the double-buffered device→host loop: chunk *i+1* is
+dispatched to the device before chunk *i* is ``jax.device_get``-ed and
+flushed, overlapping generation with host I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+JOURNAL_NAME = "progress.jsonl"
+FORMAT_VERSION = 1
+
+
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _atomic_write_bytes(path: str, data: bytes) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _atomic_save_npy(path: str, arr: np.ndarray) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+@dataclasses.dataclass
+class ShardRecord:
+    shard_id: int
+    stem: str
+    chunk_indices: List[int]
+    n_edges: int
+    worker: int = 0
+    status: str = "pending"            # pending | done
+    files: Dict[str, str] = dataclasses.field(default_factory=dict)
+    crc32: Dict[str, int] = dataclasses.field(default_factory=dict)
+    src_range: Optional[List[int]] = None     # [min, max] observed
+    dst_range: Optional[List[int]] = None
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ShardRecord":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Manifest:
+    """Self-describing dataset index: fit provenance + shard records."""
+    fit: dict                           # KroneckerFit fields
+    seed: int
+    k_pref: int
+    shard_edges: int
+    num_workers: int
+    dtype: str                          # edge id dtype, e.g. "int32"
+    total_edges: int
+    n_src: int
+    n_dst: int
+    bipartite: bool
+    theta: List[List[float]]            # per-level θ actually used
+    theta_digest: str
+    mode: str = "chunks"                # chunks | device_steps
+    n_dev: Optional[int] = None         # device_steps: mesh size the
+                                        # step seeds/shapes depend on
+    features: Optional[dict] = None     # {"n_cont": int, "cat_cards": [...]}
+    shards: List[ShardRecord] = dataclasses.field(default_factory=list)
+    version: int = FORMAT_VERSION
+
+    # -- (de)serialization -------------------------------------------------
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shards"] = [s.to_json() for s in self.shards]
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Manifest":
+        d = dict(d)
+        d["shards"] = [ShardRecord.from_json(s) for s in d.get("shards", [])]
+        return cls(**d)
+
+    def save(self, out_dir: str) -> None:
+        payload = json.dumps(self.to_json(), indent=1).encode()
+        _atomic_write_bytes(os.path.join(out_dir, MANIFEST_NAME), payload)
+
+    @classmethod
+    def load(cls, out_dir: str) -> "Manifest":
+        path = os.path.join(out_dir, MANIFEST_NAME)
+        with open(path, "rb") as f:
+            manifest = cls.from_json(json.loads(f.read().decode()))
+        manifest._replay_journal(out_dir)
+        return manifest
+
+    def _replay_journal(self, out_dir: str) -> None:
+        """Apply per-shard completion records journaled since the last
+        manifest compaction.  A torn final line (crash mid-append) is
+        skipped; replaying already-compacted records is idempotent."""
+        path = os.path.join(out_dir, JOURNAL_NAME)
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            for line in f.read().decode(errors="replace").splitlines():
+                if not line.strip():
+                    continue
+                try:
+                    rec = ShardRecord.from_json(json.loads(line))
+                except (ValueError, TypeError):
+                    continue      # torn/corrupt trailing record
+                if 0 <= rec.shard_id < len(self.shards) and \
+                        self.shards[rec.shard_id].stem == rec.stem:
+                    self.shards[rec.shard_id] = rec
+
+    @staticmethod
+    def exists(out_dir: str) -> bool:
+        return os.path.exists(os.path.join(out_dir, MANIFEST_NAME))
+
+    # -- progress ----------------------------------------------------------
+    def record(self, shard_id: int) -> ShardRecord:
+        return self.shards[shard_id]
+
+    def done_ids(self) -> List[int]:
+        return [s.shard_id for s in self.shards if s.status == "done"]
+
+    def is_complete(self) -> bool:
+        return bool(self.shards) and all(s.status == "done"
+                                         for s in self.shards)
+
+    def done_edges(self) -> int:
+        return sum(s.n_edges for s in self.shards if s.status == "done")
+
+
+class ShardWriter:
+    """Atomic per-shard column writes + O(1)-per-shard progress journal."""
+
+    COLUMNS = ("src", "dst", "cont", "cat")
+
+    def __init__(self, out_dir: str, manifest: Manifest,
+                 checkpoint_every: int = 256):
+        self.out_dir = out_dir
+        self.manifest = manifest
+        self.checkpoint_every = checkpoint_every
+        self._since_checkpoint = 0
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _journal(self, rec: ShardRecord) -> None:
+        path = os.path.join(self.out_dir, JOURNAL_NAME)
+        with open(path, "ab") as f:
+            f.write(json.dumps(rec.to_json()).encode() + b"\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def checkpoint(self) -> None:
+        """Compact: persist the full manifest and truncate the journal
+        (whose records it now subsumes)."""
+        self.manifest.save(self.out_dir)
+        path = os.path.join(self.out_dir, JOURNAL_NAME)
+        if os.path.exists(path):
+            os.truncate(path, 0)
+        self._since_checkpoint = 0
+
+    def write_shard(self, shard_id: int,
+                    arrays: Dict[str, np.ndarray]) -> ShardRecord:
+        """Write all columns of one shard, then checkpoint the manifest.
+
+        ``arrays`` maps column name ('src'/'dst'/'cont'/'cat') → host array;
+        'src' and 'dst' are required and must agree in length.
+        """
+        rec = self.manifest.record(shard_id)
+        src, dst = arrays["src"], arrays["dst"]
+        if len(src) != rec.n_edges or len(dst) != rec.n_edges:
+            raise ValueError(f"shard {shard_id}: got {len(src)} edges, "
+                             f"plan says {rec.n_edges}")
+        rec.files, rec.crc32 = {}, {}
+        for col in self.COLUMNS:
+            arr = arrays.get(col)
+            if arr is None:
+                continue
+            fname = f"{rec.stem}.{col}.npy"
+            _atomic_save_npy(os.path.join(self.out_dir, fname),
+                             np.asarray(arr))
+            rec.files[col] = fname
+            rec.crc32[col] = _crc32(np.asarray(arr))
+        rec.src_range = [int(src.min()), int(src.max())] if len(src) else None
+        rec.dst_range = [int(dst.min()), int(dst.max())] if len(dst) else None
+        rec.status = "done"
+        self._journal(rec)
+        self._since_checkpoint += 1
+        if self._since_checkpoint >= self.checkpoint_every:
+            self.checkpoint()
+        return rec
+
+    def shard_ok_on_disk(self, rec: ShardRecord, deep: bool = False) -> bool:
+        """Cheap (existence + row count) or deep (crc32) check of a shard
+        previously marked done — used before skipping it on resume."""
+        if rec.status != "done" or not rec.files:
+            return False
+        for col, fname in rec.files.items():
+            path = os.path.join(self.out_dir, fname)
+            if not os.path.exists(path):
+                return False
+            try:
+                arr = np.load(path, mmap_mode="r")
+            except (ValueError, OSError):
+                return False
+            if arr.shape[0] != rec.n_edges:
+                return False
+            if deep and _crc32(np.asarray(arr)) != rec.crc32.get(col):
+                return False
+        return True
+
+
+def pump_chunks(work: Iterable, dispatch: Callable, flush: Callable,
+                double_buffered: bool = True) -> int:
+    """Double-buffered device→host pump.
+
+    ``dispatch(item)`` launches device generation for one chunk and returns
+    the (not yet materialized) device buffers; ``flush(item, host_arrays)``
+    consumes the ``jax.device_get`` of those buffers.  With double
+    buffering, chunk *i+1* is dispatched *before* chunk *i* is fetched, so
+    the device computes while the host copies/writes (JAX dispatch is
+    async).  ``double_buffered=False`` is the serial baseline: fetch and
+    flush each chunk before dispatching the next.  Returns #items pumped.
+    """
+    n = 0
+    prev = None
+    for item in work:
+        bufs = dispatch(item)
+        if not double_buffered:
+            flush(item, jax.device_get(bufs))
+            n += 1
+            continue
+        if prev is not None:
+            flush(prev[0], jax.device_get(prev[1]))
+            n += 1
+        prev = (item, bufs)
+    if prev is not None:
+        flush(prev[0], jax.device_get(prev[1]))
+        n += 1
+    return n

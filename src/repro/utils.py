@@ -5,6 +5,36 @@ import jax
 import jax.numpy as jnp
 
 
+def shard_map_compat(fn, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` landed in 0.6; fall back to the experimental API
+    (where ``check_vma`` is spelled ``check_rep``) on older runtimes."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.sharding.AxisType`` landed in 0.5.x; older runtimes default
+    every axis to Auto, so omitting the kwarg there is equivalent."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def cost_analysis_compat(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returned a one-element list of dicts on
+    jax 0.4.x and a flat dict from 0.5 on; normalize to the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def tree_size(tree) -> int:
     return sum(x.size for x in jax.tree.leaves(tree))
 

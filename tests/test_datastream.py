@@ -1,0 +1,342 @@
+"""repro.datastream: scheduler determinism, streamed-vs-in-memory
+equivalence, kill-and-resume byte identity, reader round-trips, per-shard
+feature streaming."""
+import dataclasses
+import hashlib
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import rmat
+from repro.core.structure import KroneckerFit
+from repro.datastream import (ChunkScheduler, DatasetJob, FeatureSpec,
+                              Manifest, ShardedGraphDataset, auto_k_pref,
+                              pump_chunks)
+
+FIT = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=12, m=12, E=60_000)
+
+
+def _file_hashes(path):
+    return {f: hashlib.md5(open(os.path.join(path, f), "rb").read())
+            .hexdigest()
+            for f in sorted(os.listdir(path)) if f.endswith(".npy")}
+
+
+def _ks_degree_distance(deg_a, deg_b):
+    """Kolmogorov–Smirnov distance between two degree distributions."""
+    hi = int(max(deg_a.max(), deg_b.max())) + 1
+    cdf_a = np.cumsum(np.bincount(deg_a, minlength=hi) / len(deg_a))
+    cdf_b = np.cumsum(np.bincount(deg_b, minlength=hi) / len(deg_b))
+    return float(np.abs(cdf_a - cdf_b).max())
+
+
+# -- scheduler ---------------------------------------------------------------
+
+def test_scheduler_partition_is_exact_and_deterministic():
+    s1 = ChunkScheduler(FIT, shard_edges=8192, num_workers=3, seed=7)
+    s2 = ChunkScheduler(FIT, shard_edges=8192, num_workers=3, seed=7)
+    assert s1.shards == s2.shards
+    assert s1.theta_digest == s2.theta_digest
+    # shards cover every chunk exactly once, edges sum exactly to E
+    covered = [i for sh in s1.shards for i in sh.chunk_indices]
+    assert sorted(covered) == sorted(c.index for c in s1.chunks)
+    assert s1.total_edges == FIT.E
+    # worker queues partition the shard set
+    queues = [s1.worker_queue(w) for w in range(3)]
+    assert sum(len(q) for q in queues) == len(s1.shards)
+    assert all(sh.worker == w for w, q in enumerate(queues) for sh in q)
+    # resumable progress: pending() drops exactly the done ids
+    done = [s.shard_id for s in s1.shards[:2]]
+    assert [s.shard_id for s in s1.pending(done)] == \
+        [s.shard_id for s in s1.shards[2:]]
+
+
+def test_auto_k_pref_bounds_chunk_size():
+    k = auto_k_pref(FIT, shard_edges=4096)
+    sched = ChunkScheduler(FIT, shard_edges=4096, k_pref=k)
+    pmax = max(FIT.a, FIT.b, FIT.c, FIT.d)
+    assert FIT.E * pmax ** k <= 4096 or k == min(FIT.n, FIT.m) - 1
+    # realized max chunk stays near the expected bound
+    assert max(c.n_edges for c in sched.chunks) <= int(4096 * 1.5)
+
+
+def test_chunk_keys_are_index_stable():
+    s = ChunkScheduler(FIT, shard_edges=8192, seed=3)
+    ck = s.chunks[5]
+    np.testing.assert_array_equal(
+        s.key_for(ck), rmat.chunk_key(jax.random.PRNGKey(3), ck.index))
+
+
+# -- seeding contract (satellite fix) ---------------------------------------
+
+def test_sample_chunk_requires_explicit_theta_noise():
+    noisy = dataclasses.replace(FIT, noise=0.02)
+    chunks = rmat.chunk_plan(noisy, 2)
+    with pytest.raises(ValueError, match="derive"):
+        rmat.sample_chunk(jax.random.PRNGKey(0), noisy, chunks[0], 2)
+    th = rmat.derive_thetas(noisy, key=jax.random.PRNGKey(0))
+    rmat.sample_chunk(jax.random.PRNGKey(0), noisy, chunks[0], 2, th)
+
+
+def test_noise_differs_across_keys_but_is_key_deterministic():
+    noisy = dataclasses.replace(FIT, noise=0.02)
+    t0 = rmat.derive_thetas(noisy, key=jax.random.PRNGKey(0))
+    t0b = rmat.derive_thetas(noisy, key=jax.random.PRNGKey(0))
+    t1 = rmat.derive_thetas(noisy, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(t0, t0b)
+    assert not np.array_equal(t0, t1)
+
+
+# -- streamed == in-memory ---------------------------------------------------
+
+def test_streamed_equals_oneshot_distribution(tmp_path):
+    out = str(tmp_path / "ds")
+    job = DatasetJob(FIT, out, shard_edges=8192, seed=0)
+    job.run()
+    ds = ShardedGraphDataset(out)
+    g = ds.to_graph()
+    assert g.n_edges == FIT.E                        # exact edge count
+    s1, d1 = rmat.sample_graph(jax.random.PRNGKey(0), FIT)
+    deg_stream = np.bincount(np.asarray(g.src), minlength=2 ** FIT.n)
+    deg_one = np.bincount(np.asarray(s1), minlength=2 ** FIT.n)
+    assert _ks_degree_distance(deg_stream, deg_one) < 0.02
+    deg_stream_in = np.bincount(np.asarray(g.dst), minlength=2 ** FIT.m)
+    deg_one_in = np.bincount(np.asarray(d1), minlength=2 ** FIT.m)
+    assert _ks_degree_distance(deg_stream_in, deg_one_in) < 0.02
+
+
+def test_streamed_matches_chunked_sampler_exactly(tmp_path):
+    out = str(tmp_path / "ds")
+    job = DatasetJob(FIT, out, shard_edges=8192, seed=0)
+    job.run()
+    g = ShardedGraphDataset(out).to_graph()
+    s, d = rmat.sample_graph_chunked(jax.random.PRNGKey(0), FIT,
+                                     k_pref=job.k_pref)
+    # same chunk keys + same θ ⇒ identical multisets of edges
+    np.testing.assert_array_equal(np.sort(np.asarray(g.src)),
+                                  np.sort(np.asarray(s)))
+    np.testing.assert_array_equal(np.sort(np.asarray(g.dst)),
+                                  np.sort(np.asarray(d)))
+
+
+def test_serial_and_double_buffered_are_identical(tmp_path):
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    DatasetJob(FIT, a, shard_edges=8192, double_buffered=True).run()
+    DatasetJob(FIT, b, shard_edges=8192, double_buffered=False).run()
+    assert _file_hashes(a) == _file_hashes(b)
+
+
+# -- kill and resume ---------------------------------------------------------
+
+def test_kill_and_resume_is_byte_identical(tmp_path):
+    full, part = str(tmp_path / "full"), str(tmp_path / "part")
+    DatasetJob(FIT, full, shard_edges=8192, seed=0).run()
+    # simulate preemption after 3 shards
+    DatasetJob(FIT, part, shard_edges=8192, seed=0).run(max_shards=3)
+    m = Manifest.load(part)
+    assert len(m.done_ids()) == 3 and not m.is_complete()
+    with pytest.raises(RuntimeError, match="incomplete"):
+        ShardedGraphDataset(part)
+    before = _file_hashes(part)
+    m2 = DatasetJob(FIT, part, shard_edges=8192, seed=0).resume()
+    assert m2.is_complete()
+    after = _file_hashes(part)
+    # finished shards untouched, and the whole dataset matches an
+    # uninterrupted run byte for byte
+    assert all(after[f] == h for f, h in before.items())
+    assert after == _file_hashes(full)
+    assert ShardedGraphDataset(part).verify(deep=True) == []
+
+
+def test_resume_regenerates_corrupted_shard(tmp_path):
+    out = str(tmp_path / "ds")
+    DatasetJob(FIT, out, shard_edges=8192, seed=0).run(max_shards=2)
+    victim = Manifest.load(out).shards[0].files["src"]
+    os.remove(os.path.join(out, victim))
+    m = DatasetJob(FIT, out, shard_edges=8192, seed=0).resume()
+    assert m.is_complete()
+    assert ShardedGraphDataset(out).verify(deep=True) == []
+
+
+def test_resume_refuses_mismatched_config(tmp_path, rng):
+    out = str(tmp_path / "ds")
+    DatasetJob(FIT, out, shard_edges=8192, seed=0).run(max_shards=1)
+    with pytest.raises(ValueError, match="different"):
+        DatasetJob(FIT, out, shard_edges=8192, seed=1).resume()
+    # a resumed job must produce the same columns: features on/off mismatch
+    spec, _ = _fitted_feature_spec(rng)
+    with pytest.raises(ValueError, match="features"):
+        DatasetJob(FIT, out, shard_edges=8192, seed=0,
+                   features=spec).resume()
+    # device_steps resumption depends on the mesh size
+    m = Manifest.load(out)
+    m.mode, m.n_dev = "device_steps", 4
+    m.save(out)
+    with pytest.raises(ValueError, match="n_dev"):
+        DatasetJob(FIT, out, shard_edges=8192, seed=0,
+                   mode="device_steps").resume()
+    with pytest.raises(FileExistsError):
+        DatasetJob(FIT, out, shard_edges=8192, seed=0).run()  # no resume
+
+
+def test_journal_replay_recovers_uncompacted_progress(tmp_path):
+    """A crash before manifest compaction loses nothing: per-shard
+    completions live in progress.jsonl and Manifest.load replays them."""
+    from repro.datastream.writer import JOURNAL_NAME, ShardWriter
+    out = str(tmp_path / "ds")
+    job = DatasetJob(FIT, out, shard_edges=8192, seed=0)
+    manifest = job.plan()
+    writer = ShardWriter(out, manifest, checkpoint_every=10_000)
+    rec = manifest.shards[0]
+    writer.write_shard(0, job._generate_shard_chunks(rec))
+    # no compaction yet: on-disk manifest.json is stale, journal is not
+    import json as _json
+    raw = _json.load(open(os.path.join(out, "manifest.json")))
+    assert all(s["status"] == "pending" for s in raw["shards"])
+    assert os.path.getsize(os.path.join(out, JOURNAL_NAME)) > 0
+    assert Manifest.load(out).done_ids() == [0]       # replayed
+    before = _file_hashes(out)
+    m2 = DatasetJob(FIT, out, shard_edges=8192, seed=0).resume()
+    assert m2.is_complete()
+    after = _file_hashes(out)
+    assert all(after[f] == h for f, h in before.items())
+    # resume compacted: journal truncated, manifest current
+    assert os.path.getsize(os.path.join(out, JOURNAL_NAME)) == 0
+    assert ShardedGraphDataset(out).verify(deep=True) == []
+
+
+# -- reader ------------------------------------------------------------------
+
+def test_reader_batches_and_verify(tmp_path):
+    out = str(tmp_path / "ds")
+    DatasetJob(FIT, out, shard_edges=8192, seed=0).run()
+    ds = ShardedGraphDataset(out)
+    assert ds.total_edges == FIT.E and len(ds) >= 2
+    sizes = []
+    seen = 0
+    for src, dst, cont, cat in ds.batches(10_000):
+        assert len(src) == len(dst)
+        assert cont is None and cat is None
+        sizes.append(len(src))
+        seen += len(src)
+    assert seen == FIT.E
+    assert all(s == 10_000 for s in sizes[:-1])
+    assert ds.verify(deep=True) == []
+
+
+def test_device_steps_multidevice(tmp_path):
+    """device_steps on a >1-device mesh: per-device prefixes cover the id
+    space, dst levels keep full θ rows (noise on would misalign otherwise),
+    and the dataset verifies."""
+    import subprocess
+    import sys
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.core.structure import KroneckerFit
+from repro.datastream import DatasetJob, ShardedGraphDataset
+fit = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=10, m=10, E=20000,
+                   noise=0.03)
+job = DatasetJob(fit, {str(tmp_path / 'ds')!r}, shard_edges=8192, seed=0,
+                 mode="device_steps")
+job.run()
+ds = ShardedGraphDataset({str(tmp_path / 'ds')!r})
+assert ds.manifest.n_dev == 4, ds.manifest.n_dev
+assert ds.verify(deep=True) == []
+g = ds.to_graph()
+assert g.n_edges == fit.E
+src = np.asarray(g.src)
+assert src.max() < 2 ** fit.n
+assert sorted(np.unique(src >> (fit.n - 2)).tolist()) == [0, 1, 2, 3]
+print("multidevice ok")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=300,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+
+
+def test_device_steps_mode(tmp_path):
+    out = str(tmp_path / "ds")
+    job = DatasetJob(FIT, out, shard_edges=16_384, seed=0,
+                     mode="device_steps")
+    job.run()
+    ds = ShardedGraphDataset(out)
+    g = ds.to_graph()
+    assert g.n_edges == FIT.E
+    assert ds.verify(deep=True) == []
+    assert np.asarray(g.src).max() < 2 ** FIT.n
+
+
+# -- per-shard features ------------------------------------------------------
+
+def _fitted_feature_spec(rng):
+    from repro.core.aligner import RandomAligner
+    from repro.core.features import KDEFeatureGenerator
+    from repro.tabular.schema import infer_schema
+    cont = rng.normal(size=(500, 2)).astype(np.float32)
+    cat = rng.integers(0, 3, size=(500, 1)).astype(np.int32)
+    schema = infer_schema(cont, cat)
+    gen = KDEFeatureGenerator(schema).fit(cont, cat)
+    return FeatureSpec(gen, RandomAligner(schema)), schema
+
+
+def test_feature_streaming_bounded_per_shard(tmp_path, rng):
+    spec, schema = _fitted_feature_spec(rng)
+    out = str(tmp_path / "ds")
+    job = DatasetJob(FIT, out, shard_edges=8192, seed=0, features=spec)
+    job.run()
+    ds = ShardedGraphDataset(out)
+    assert ds.has_features
+    assert ds.manifest.features == {"n_cont": 2, "cat_cards": [3]}
+    total = 0
+    for blk in ds:
+        assert blk.cont.shape == (blk.n_edges, 2)
+        assert blk.cat.shape == (blk.n_edges, 1)
+        assert blk.cat.max() < 3
+        total += blk.n_edges
+    assert total == FIT.E
+    # feature draw is a pure function of (seed, shard_id): resume after
+    # deleting a shard reproduces identical features
+    files = Manifest.load(out).shards[1].files
+    before = _file_hashes(out)
+    os.remove(os.path.join(out, files["cont"]))
+    DatasetJob(FIT, out, shard_edges=8192, seed=0,
+               features=spec).resume()
+    assert _file_hashes(out) == before
+
+
+def test_pipeline_generate_streamed(tmp_path, rng):
+    from repro.core.pipeline import SyntheticGraphPipeline
+    from repro.graph.ops import Graph
+    src = rng.integers(0, 256, 4000).astype(np.int32)
+    dst = rng.integers(0, 256, 4000).astype(np.int32)
+    g = Graph(src, dst, 256, 256)
+    cont = rng.normal(size=(4000, 2)).astype(np.float32)
+    cat = rng.integers(0, 3, size=(4000, 1)).astype(np.int32)
+    pipe = SyntheticGraphPipeline(features="kde", aligner="random")
+    pipe.fit(g, cont, cat)
+    ds = pipe.generate_streamed(str(tmp_path / "ds"), seed=0,
+                                shard_edges=2048)
+    assert ds.total_edges == pipe.struct.E
+    assert ds.has_features
+    assert ds.verify(deep=True) == []
+
+
+# -- pump --------------------------------------------------------------------
+
+def test_pump_chunks_order_and_completeness():
+    items = list(range(7))
+    for dbl in (True, False):
+        flushed = []
+        n = pump_chunks(items, dispatch=lambda i: np.full(3, i),
+                        flush=lambda i, host: flushed.append((i, host.sum())),
+                        double_buffered=dbl)
+        assert n == 7
+        assert [i for i, _ in flushed] == items
+        assert [s for _, s in flushed] == [3 * i for i in items]

@@ -41,8 +41,8 @@ def test_resolve_spec_divisibility_fallback():
     import jax
     from jax.sharding import PartitionSpec as P
     from repro.distributed.sharding import resolve_spec
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils import make_mesh_compat
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     rules = {"vocab": ("model",), "heads": ("model",), "batch": (("data",),)}
     # divisible -> sharded
     assert resolve_spec(("vocab", None), (64, 7), rules, mesh) == P("model")
@@ -72,8 +72,8 @@ def test_zero_opt_sharding_adds_data_axis():
     from repro.distributed.sharding import make_rules
     from repro.training.steps import opt_state_shardings
     from repro.training.optimizer import abstract_opt_state
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils import make_mesh_compat
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     cfg = get_config("tinyllama-1.1b").smoke()
     m = Model(cfg)
     o = abstract_opt_state(m.abstract_params())
@@ -138,13 +138,12 @@ def test_elastic_restore_different_mesh(tmp_path):
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.distributed import checkpoint as ck
-    mesh1 = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.utils import make_mesh_compat
+    mesh1 = make_mesh_compat((2, 2), ("data", "model"))
     x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
     xs = jax.device_put(x, NamedSharding(mesh1, P("data", "model")))
     ck.save({str(tmp_path)!r}, 1, {{"w": xs}})
-    mesh2 = jax.make_mesh((4, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh2 = make_mesh_compat((4, 1), ("data", "model"))
     sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
     restored, _ = ck.restore({str(tmp_path)!r}, {{"w": x}}, shardings=sh2)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))
@@ -175,8 +174,8 @@ def test_compressed_psum_multidevice():
     _run_subprocess("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.compression import compressed_psum, init_error_buffer
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils import make_mesh_compat
+    mesh = make_mesh_compat((4,), ("pod",))
     g = {"w": jnp.ones((8, 8), jnp.float32) * 2.0}
     e = init_error_buffer(g)
     with mesh:

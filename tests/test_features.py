@@ -2,7 +2,8 @@
 codec invariants, KDE/random baselines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.features import (GANConfig, GANFeatureGenerator,
                                  KDEFeatureGenerator, RandomFeatureGenerator,

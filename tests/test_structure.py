@@ -3,7 +3,7 @@ tests (hypothesis) on the paper's invariants."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import rmat
 from repro.core.structure import (KroneckerFit, combine, estimate_ratios_mle,
