@@ -65,6 +65,21 @@ def main(argv=None) -> int:
                     help="App. 9 per-level θ-noise amplitude")
     ap.add_argument("--mode", choices=("chunks", "device_steps"),
                     default="chunks")
+    ap.add_argument("--backend", default=None,
+                    choices=("auto", "xla", "pallas_bits", "pallas_prng"),
+                    help="edge-sampler engine backend (repro.core.sampler): "
+                         "'xla' = jit reference (runs everywhere), "
+                         "'pallas_bits' = Pallas kernel with HBM bit "
+                         "streams (interpret on CPU, compiled on TPU), "
+                         "'pallas_prng' = TPU-only VMEM-resident PRNG "
+                         "kernel (fastest). Default/auto picks by device; "
+                         "the choice is recorded in the manifest and "
+                         "validated on --resume (streams differ per "
+                         "backend)")
+    ap.add_argument("--id-dtype", default=None, choices=("int32", "int64"),
+                    help="node id width (default: auto from the fit — "
+                         "int32 up to 2^31 ids, int64 up to 2^62; int64 "
+                         "needs no jax x64 in chunks mode)")
     ap.add_argument("--workers", type=int, default=1,
                     help="worker queues in the plan (see --worker)")
     ap.add_argument("--worker", type=int, default=None,
@@ -79,18 +94,25 @@ def main(argv=None) -> int:
                     help="deep-verify the dataset after generation")
     args = ap.parse_args(argv)
 
+    import numpy as np
+
     from repro.datastream import DatasetJob, ShardedGraphDataset
 
     fit = build_fit(args)
-    job = DatasetJob(fit, args.out,
-                     shard_edges=parse_count(args.shard_edges),
-                     seed=args.seed, k_pref=args.k_pref,
-                     num_workers=args.workers,
-                     double_buffered=not args.serial, mode=args.mode)
-    print(f"plan: E={fit.E:,} edges, 2^{fit.n}×2^{fit.m} ids, "
+    try:
+        job = DatasetJob(fit, args.out,
+                         shard_edges=parse_count(args.shard_edges),
+                         seed=args.seed, k_pref=args.k_pref,
+                         num_workers=args.workers,
+                         double_buffered=not args.serial, mode=args.mode,
+                         backend=args.backend, id_dtype=args.id_dtype)
+    except (KeyError, ValueError) as e:
+        raise SystemExit(f"error: {e}")
+    print(f"plan: E={fit.E:,} edges, 2^{fit.n}×2^{fit.m} ids "
+          f"({np.dtype(job.dtype).name}), "
           f"k_pref={job.k_pref}, {len(job.scheduler.shards)} shards "
           f"(max {job.scheduler.max_shard_edges:,} edges/shard), "
-          f"mode={args.mode}", file=sys.stderr)
+          f"mode={args.mode}, backend={job.backend}", file=sys.stderr)
     t0 = time.time()
     try:
         manifest = job.run(resume=args.resume, max_shards=args.max_shards,

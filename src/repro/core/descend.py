@@ -1,0 +1,132 @@
+"""The ONE R-MAT level-descend decision core.
+
+Every edge-sampling path in the repo — the jit'd XLA reference, the Pallas
+kernels (uniforms / HBM-bits / in-VMEM PRNG), the shard_map body of
+``distributed_gen.device_generate``, and the ``kernels/ref.py`` oracle —
+imports ``descend`` from here.  There is deliberately no second copy of
+the level-bit logic anywhere under ``src/``.
+
+Wide (>31-bit) node ids
+-----------------------
+TPUs (and jax without x64) have no native int64, so ids are accumulated
+as an ``IdParts(hi, lo)`` pair of int32 words: the first ``bits - LO_BITS``
+levels push into ``hi``, the remaining (at most ``LO_BITS``) into ``lo``.
+``combine_ids`` reassembles the pair into a host numpy int64 array (works
+with or without jax x64); ``combine_ids_device`` is the in-graph variant
+for device-resident composition (needs x64 for 64-bit dtypes).  The pair
+representation supports up to ``2 * LO_BITS`` = 62 id bits.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+#: bits held by each int32 word of an ``IdParts`` pair (sign bit excluded)
+LO_BITS = 31
+
+#: hard ceiling of the (hi, lo) representation
+MAX_ID_BITS = 2 * LO_BITS
+
+
+class IdParts(NamedTuple):
+    """Node ids as a (hi, lo) int32 pair; ``hi is None`` for narrow ids."""
+    hi: Optional[Any]
+    lo: Any
+
+
+def id_capacity(dtype) -> int:
+    """Usable id bits of a signed integer dtype (sign bit excluded)."""
+    return np.iinfo(np.dtype(dtype)).bits - 1
+
+
+def check_id_capacity(bits: int, dtype, what: str) -> None:
+    """Raise a clear error instead of letting prefix/level bit-pushes wrap."""
+    cap = id_capacity(dtype)
+    name = np.dtype(dtype).name
+    if bits > MAX_ID_BITS:
+        raise ValueError(
+            f"{what}: needs {bits} id bits, beyond the {MAX_ID_BITS}-bit "
+            "limit of the (hi, lo) int32-pair id representation")
+    if bits > cap:
+        raise ValueError(
+            f"{what}: needs {bits} id bits but id_dtype={name} holds only "
+            f"{cap} — pass id_dtype=np.int64 (ids up to "
+            f"{MAX_ID_BITS} bits)")
+
+
+def default_id_dtype(bits: int) -> np.dtype:
+    """The narrowest supported id dtype for a ``bits``-bit id space."""
+    return np.dtype(np.int32 if bits <= LO_BITS else np.int64)
+
+
+def descend(get_u, theta_at, n: int, m: int, zeros):
+    """Shared level loop: one uniform per edge per level, predicated
+    bit-pushes — no gathers, no divergence (VPU/lane friendly).
+
+    ``get_u(ell)`` returns the level's uniforms (any batch shape),
+    ``theta_at(ell)`` the level's ``(a, b, c)`` scalars, and ``zeros()`` a
+    fresh int32 zero accumulator of the batch shape.  Levels beyond
+    ``min(n, m)`` use only the marginals (``p = a+b`` row-zero prob,
+    ``q = a+c`` col-zero prob).  Returns ``(src, dst)`` as ``IdParts``.
+    """
+    lv_sq = min(n, m)
+    n_hi, m_hi = max(0, n - LO_BITS), max(0, m - LO_BITS)
+    src_hi = zeros() if n_hi else None
+    dst_hi = zeros() if m_hi else None
+    src_lo, dst_lo = zeros(), zeros()
+    si = di = 0                       # bits emitted so far (static)
+    for ell in range(max(n, m)):
+        u = get_u(ell)
+        a, b, c = theta_at(ell)
+        sb = db = None
+        if ell < lv_sq:
+            sb = (u >= a + b).astype(jnp.int32)
+            db = jnp.logical_or(jnp.logical_and(u >= a, u < a + b),
+                                u >= a + b + c).astype(jnp.int32)
+        elif n > m:                   # extra row levels: θ_V = [p; 1-p]
+            sb = (u >= a + b).astype(jnp.int32)
+        else:                         # extra col levels: θ_H = [q, 1-q]
+            db = (u >= a + c).astype(jnp.int32)
+        if sb is not None:
+            if si < n_hi:
+                src_hi = src_hi * 2 + sb
+            else:
+                src_lo = src_lo * 2 + sb
+            si += 1
+        if db is not None:
+            if di < m_hi:
+                dst_hi = dst_hi * 2 + db
+            else:
+                dst_lo = dst_lo * 2 + db
+            di += 1
+    return IdParts(src_hi, src_lo), IdParts(dst_hi, dst_lo)
+
+
+def combine_ids(parts: IdParts, bits: int, dtype, prefix: int = 0
+                ) -> np.ndarray:
+    """Host-side (numpy) reassembly: ``(prefix << bits) | (hi << LO) | lo``.
+
+    Independent of jax x64 — the wide path's ids never round-trip through
+    a jnp int64 array.  ``bits`` is the number of level bits in ``parts``
+    (the prefix shifts past all of them).
+    """
+    dt = np.dtype(dtype)
+    out = np.asarray(parts.lo).astype(dt)
+    if parts.hi is not None:
+        out = out + (np.asarray(parts.hi).astype(dt) << min(bits, LO_BITS))
+    if prefix:
+        out = out + dt.type(int(prefix) << int(bits))
+    return out
+
+
+def combine_ids_device(parts: IdParts, bits: int, dtype, prefix=None):
+    """In-graph reassembly (jnp); 64-bit dtypes require jax x64."""
+    dt = np.dtype(dtype)
+    out = parts.lo.astype(dt)
+    if parts.hi is not None:
+        out = out + (parts.hi.astype(dt) << min(bits, LO_BITS))
+    if prefix is not None:
+        out = out + (prefix.astype(dt) << bits)
+    return out

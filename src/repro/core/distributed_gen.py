@@ -7,6 +7,10 @@ ZERO collectives (the roofline collective term of this step is ~0 by
 construction — the paper's linear multi-GPU scaling claim, reproduced as a
 property of the lowered HLO).
 
+The shard_map body contains no sampling logic of its own: it drives the
+repo-wide shared level-descend core (``repro.core.descend.descend``) and
+composes the device prefix with ``combine_ids_device``.
+
 ``build_generation_cell`` returns the lowering target used by
 ``launch/dryrun.py --graphgen``: one streaming step of the trillion-edge
 configuration (2^30 × 2^30 nodes, 2^24 edges/device/step ⇒ 8.6e9 edges per
@@ -21,9 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.rmat import _level_bits
-
-
+from repro.core.descend import (check_id_capacity, combine_ids_device,
+                                descend)
 from repro.utils import shard_map_compat as _shard_map
 
 
@@ -59,33 +62,38 @@ def device_generate(thetas, seeds, n: int, m: int, edges_per_device: int,
     axes = tuple(mesh.axis_names)
     n_dev = mesh.size
     k_pref = int(np.log2(n_dev))  # device index becomes a src-prefix
+    dt = np.dtype(dtype)
+    # device prefix bits + level bits must fit the id dtype — raise
+    # instead of wrapping (``didx << n`` silently overflowed for n ≥ 31)
+    check_id_capacity(n + k_pref, dt,
+                      "device_generate: device prefix + src level bits")
+    check_id_capacity(m, dt, "device_generate: dst level bits")
+    if dt.itemsize > 4 and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "device_generate with int64 ids composes ids on-device; "
+            "enable jax x64 (JAX_ENABLE_X64=1) or use the host-combining "
+            "chunks path (datastream mode='chunks')")
+    L = max(n, m)
 
     def local(thetas, seed, u_in):
-        key = jax.random.fold_in(jax.random.PRNGKey(0), seed[0])
-        src = jnp.zeros((edges_per_device,), dtype)
-        dst = jnp.zeros((edges_per_device,), dtype)
-        lv_sq = min(n, m)
-        for ell in range(max(n, m)):
-            if u_in is not None:
-                u = u_in[0, ell]
-            else:
-                key, sub = jax.random.split(key)
-                u = jax.random.uniform(sub, (edges_per_device,), jnp.float32)
-            th = thetas[ell]
-            if ell < lv_sq:
-                sb, db = _level_bits(u, th)
-                src = src * 2 + sb.astype(dtype)
-                dst = dst * 2 + db.astype(dtype)
-            elif n > m:
-                src = src * 2 + (u >= th[0] + th[1]).astype(dtype)
-            else:
-                dst = dst * 2 + (u >= th[0] + th[2]).astype(dtype)
+        if u_in is None:
+            keys = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(0), seed[0]), L)
+            get_u = lambda ell: jax.random.uniform(         # noqa: E731
+                keys[ell], (edges_per_device,), jnp.float32)
+        else:
+            get_u = lambda ell: u_in[0, ell]                # noqa: E731
+        src, dst = descend(
+            get_u,
+            lambda ell: (thetas[ell, 0], thetas[ell, 1], thetas[ell, 2]),
+            n, m, lambda: jnp.zeros((edges_per_device,), jnp.int32))
         # prepend device prefix on src (disjoint id ranges per device)
         didx = jnp.zeros((), jnp.int32)
         for ax in axes:
             didx = didx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        src = src + (didx.astype(dtype) << n)
-        return src[None], dst[None]
+        src_ids = combine_ids_device(src, n, dt, prefix=didx)
+        dst_ids = combine_ids_device(dst, m, dt)
+        return src_ids[None], dst_ids[None]
 
     if uniforms is not None:
         fn = _shard_map(
@@ -117,8 +125,14 @@ def build_generation_cell(mesh, scale: str = "1t",
 
     mode='threefry': bits generated on-device (TPU-native).
     mode='hbm_uniforms': pre-generated uniforms stream from HBM — the
-    faithful port of the paper's GPU sampler structure (§Perf baseline)."""
-    n = m = 30  # 2^30 nodes per partite within each device's prefix range
+    faithful port of the paper's GPU sampler structure (§Perf baseline).
+
+    The device prefix is part of the 2^30 src id space (top ``log2(n_dev)``
+    src levels = device index, sampled suffix = the rest), so ids fit
+    int32 on any mesh — the previous layout pushed the prefix *above* 30
+    bits and silently wrapped for ≥ 2 devices."""
+    m = 30          # 2^30 nodes per partite (total, across the mesh)
+    n = m - int(np.log2(mesh.size))   # per-device src suffix levels
     L = max(n, m)
     thetas_abs = jax.ShapeDtypeStruct((L, 4), jnp.float32)
     seeds_abs = jax.ShapeDtypeStruct((mesh.size,), jnp.int32)

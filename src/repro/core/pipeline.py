@@ -89,18 +89,31 @@ class SyntheticGraphPipeline:
     # -- generate -------------------------------------------------------------
     def generate(self, seed: int = 0, scale_nodes: int = 1,
                  density_preserving: bool = True, chunked: bool = False,
-                 k_pref: int = 2
+                 k_pref: int = 2, backend: Optional[str] = None,
+                 id_dtype=None
                  ) -> Tuple[Graph, np.ndarray, np.ndarray]:
+        """``backend`` picks the ``repro.core.sampler`` engine backend for
+        kronecker structure generation (None/'auto' = device default);
+        ``id_dtype`` widens node ids (auto int32/int64 by fit size)."""
         rng = np.random.default_rng(seed)
         key = jax.random.PRNGKey(seed)
         t0 = time.time()
         if self.struct_kind == "kronecker":
+            if backend is None:
+                backend = "auto"   # same default as generate_streamed:
+                                   # auto-select the backend by device
             fit: KroneckerFit = self.struct.scaled(scale_nodes,
                                                    density_preserving)
+            if id_dtype is None:
+                from repro.core.descend import default_id_dtype
+                id_dtype = default_id_dtype(max(fit.n, fit.m))
             if chunked:
-                src, dst = rmat.sample_graph_chunked(key, fit, k_pref, rng=rng)
+                src, dst = rmat.sample_graph_chunked(key, fit, k_pref,
+                                                     rng=rng, dtype=id_dtype,
+                                                     backend=backend)
             else:
-                src, dst = rmat.sample_graph(key, fit, rng=rng)
+                src, dst = rmat.sample_graph(key, fit, rng=rng,
+                                             dtype=id_dtype, backend=backend)
             g = Graph(np.asarray(src), np.asarray(dst),
                       2 ** fit.n, 2 ** fit.m, self._g_ref.bipartite)
         else:
@@ -126,10 +139,15 @@ class SyntheticGraphPipeline:
                           k_pref: Optional[int] = None,
                           include_features: bool = True,
                           double_buffered: bool = True,
-                          resume: bool = False, mode: str = "chunks"):
+                          resume: bool = False, mode: str = "chunks",
+                          backend: Optional[str] = None, id_dtype=None):
         """Materialize the generated graph to a sharded on-disk dataset
         instead of host memory (see ``repro.datastream``) — the path for
         outputs that exceed RAM.  Returns a ``ShardedGraphDataset``.
+
+        ``backend`` picks the edge-sampler engine backend (recorded in
+        the manifest); ``id_dtype`` overrides the auto int32/int64 node
+        id width (int64 ids work without jax x64).
 
         Features/alignment ride along per shard when the pipeline is
         fitted with edge features; node-feature pipelines stream structure
@@ -150,7 +168,8 @@ class SyntheticGraphPipeline:
         t0 = time.time()
         job = DatasetJob(fit, out_dir, shard_edges=shard_edges, seed=seed,
                          k_pref=k_pref, double_buffered=double_buffered,
-                         mode=mode, features=features)
+                         mode=mode, features=features, backend=backend,
+                         id_dtype=id_dtype)
         job.run(resume=resume)
         self.timings.gen_struct_s = time.time() - t0
         return job.dataset()

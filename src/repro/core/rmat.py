@@ -1,12 +1,16 @@
 """Edge sampling for the generalized stochastic Kronecker generator.
 
-``sample_edges`` is the vectorized JAX reference path (one uniform per edge
-per level, predicated bit-pushes — the same algorithm the Pallas kernel in
-``repro.kernels.rmat_sample`` tiles into VMEM).  ``chunk_plan`` +
-``sample_chunk`` implement the paper's App. 10 chunked generation: θ is
-split ``θ_pref ⊗ θ_gen``; prefix sampling is replaced by its expectation
-``E_i = E · P(prefix = i)`` so chunks are id-disjoint, deterministic in
-count, and embarrassingly parallel (each chunk only needs its own PRNG key).
+All sampling routes through the unified engine in ``repro.core.sampler``
+(one shared level-descend core, pluggable xla / pallas_bits / pallas_prng
+backends).  ``sample_edges`` is the ``xla`` backend's contract (kept as
+the stable reference API); ``chunk_plan`` + ``sample_chunk`` implement
+the paper's App. 10 chunked generation: θ is split ``θ_pref ⊗ θ_gen``;
+prefix sampling is replaced by its expectation ``E_i = E · P(prefix = i)``
+so chunks are id-disjoint, deterministic in count, and embarrassingly
+parallel (each chunk only needs its own PRNG key).
+
+Node ids follow the engine's dtype contract: int32 up to 31 bits, int64
+(``(hi, lo)`` pair descend + host combine — no jax x64 needed) up to 62.
 """
 from __future__ import annotations
 
@@ -17,43 +21,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sampler as sampler_mod
+from repro.core.descend import check_id_capacity
 from repro.core.structure import KroneckerFit, noisy_thetas
 
 
-def _level_bits(u, th):
-    """u: (E,) uniforms; th: (4,) [a,b,c,d] -> (src_bit, dst_bit) int32."""
-    a, b, c = th[0], th[1], th[2]
-    src_bit = (u >= a + b).astype(jnp.int32)
-    dst_bit = (((u >= a) & (u < a + b)) | (u >= a + b + c)).astype(jnp.int32)
-    return src_bit, dst_bit
-
-
 def sample_edges(key, thetas, n: int, m: int, n_edges: int,
-                 dtype=jnp.int32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                 dtype=jnp.int32, backend: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sample ``n_edges`` edges of a 2^n × 2^m adjacency.
 
     thetas: (max(n,m), 4) per-level (a,b,c,d) — rows beyond min(n,m) use
     only their marginals (p = a+b row-zero prob, q = a+c col-zero prob).
+    ``backend=None`` keeps the ``xla`` reference stream (bit-stable across
+    repo versions); pass a registry name or ``'auto'`` to switch engines.
     """
-    lv_sq = min(n, m)
-    L = max(n, m)
-    keys = jax.random.split(key, L)
-    src = jnp.zeros((n_edges,), dtype)
-    dst = jnp.zeros((n_edges,), dtype)
-    for ell in range(L):
-        u = jax.random.uniform(keys[ell], (n_edges,), jnp.float32)
-        th = thetas[ell]
-        if ell < lv_sq:
-            sb, db = _level_bits(u, th)
-            src = src * 2 + sb.astype(dtype)
-            dst = dst * 2 + db.astype(dtype)
-        elif n > m:                       # extra row levels: θ_V = [p; 1-p]
-            p = th[0] + th[1]
-            src = src * 2 + (u >= p).astype(dtype)
-        else:                             # extra col levels: θ_H = [q, 1-q]
-            q = th[0] + th[2]
-            dst = dst * 2 + (u >= q).astype(dtype)
-    return src, dst
+    be = sampler_mod.get_backend("xla") if backend is None \
+        else sampler_mod.resolve_backend(backend, n_edges)
+    return be.sample(key, thetas, n, m, n_edges, id_dtype=dtype)
 
 
 _NOISE_SALT = 0x5eed
@@ -98,11 +83,11 @@ def chunk_key(key, chunk_index: int):
 
 def sample_graph(key, fit: KroneckerFit, n_edges: Optional[int] = None,
                  rng: Optional[np.random.Generator] = None,
-                 dtype=jnp.int32):
+                 dtype=jnp.int32, backend: Optional[str] = None):
     """One-shot (unchunked) generation from a fit."""
     thetas = jnp.asarray(derive_thetas(fit, rng=rng, key=key), jnp.float32)
     E = n_edges if n_edges is not None else fit.E
-    return sample_edges(key, thetas, fit.n, fit.m, E, dtype)
+    return sample_edges(key, thetas, fit.n, fit.m, E, dtype, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +106,9 @@ def chunk_plan(fit: KroneckerFit, k_pref: int,
     """Enumerate the 4^k_pref prefix chunks with expected edge counts.
 
     Uses the first ``k_pref`` (square) levels of θ; expected counts are
-    rounded with largest-remainder so they sum exactly to E.
+    rounded with largest-remainder so they sum exactly to E.  Fully
+    vectorized (numpy bit de-interleave over the nonzero chunks) — the
+    former per-chunk Python loop dominated plan time at k_pref ≥ 8.
     """
     assert k_pref <= min(fit.n, fit.m), (k_pref, fit.n, fit.m)
     if thetas is None:
@@ -130,26 +117,27 @@ def chunk_plan(fit: KroneckerFit, k_pref: int,
     probs = np.ones(1)
     for ell in range(k_pref):
         probs = np.kron(probs, thetas[ell])
-    # quadrant index sequence -> (src_prefix, dst_prefix)
     raw = probs * fit.E
     base = np.floor(raw).astype(np.int64)
     rem = fit.E - base.sum()
     order = np.argsort(raw - base)[::-1]
     base[order[:rem]] += 1
-    chunks = []
-    for idx in range(4 ** k_pref):
-        sp = dp = 0
-        for ell in range(k_pref):
-            quad = (idx >> (2 * (k_pref - 1 - ell))) & 3
-            sp = sp * 2 + (quad >> 1)
-            dp = dp * 2 + (quad & 1)
-        if base[idx] > 0:
-            chunks.append(Chunk(sp, dp, int(base[idx]), idx))
-    return chunks
+    # quadrant index sequence -> (src_prefix, dst_prefix): de-interleave
+    # the 2k_pref-bit chunk index into odd (src) and even (dst) bits
+    nz = np.flatnonzero(base)
+    sp = np.zeros(len(nz), np.int64)
+    dp = np.zeros(len(nz), np.int64)
+    for ell in range(k_pref):
+        quad = (nz >> (2 * (k_pref - 1 - ell))) & 3
+        sp = sp * 2 + (quad >> 1)
+        dp = dp * 2 + (quad & 1)
+    return [Chunk(int(s), int(d), int(e), int(i))
+            for s, d, e, i in zip(sp, dp, base[nz], nz)]
 
 
 def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
-                 thetas=None, dtype=jnp.int32):
+                 thetas=None, dtype=jnp.int32,
+                 backend: Optional[str] = None):
     """Sample one chunk: suffix levels from θ_gen, prefix bits prepended.
     Guaranteed id-disjoint across chunks (distinct prefixes).
 
@@ -157,6 +145,10 @@ def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
     threaded through every chunk of a generation; for noiseless fits it is
     optional (the deterministic base is used).
     """
+    # prefix bits + suffix level bits must fit the id dtype — raise
+    # instead of wrapping (int32 silently capped ids at 2^31 before)
+    check_id_capacity(fit.n, dtype, "sample_chunk: src prefix+level bits")
+    check_id_capacity(fit.m, dtype, "sample_chunk: dst prefix+level bits")
     if thetas is None:
         if fit.noise > 0:
             raise ValueError(
@@ -164,18 +156,26 @@ def sample_chunk(key, fit: KroneckerFit, chunk: Chunk, k_pref: int,
                 "caller and pass thetas= — a per-call default rng would "
                 "silently reuse identical θ-noise across chunks")
         thetas = derive_thetas(fit)
-    suffix = jnp.asarray(thetas[k_pref:], jnp.float32)
+    suffix = jnp.asarray(np.asarray(thetas)[k_pref:], jnp.float32)
     n_s, m_s = fit.n - k_pref, fit.m - k_pref
-    src, dst = sample_edges(key, suffix, n_s, m_s, chunk.n_edges, dtype)
-    src = src + (chunk.src_prefix << n_s)
-    dst = dst + (chunk.dst_prefix << m_s)
+    src, dst = sample_edges(key, suffix, n_s, m_s, chunk.n_edges, dtype,
+                            backend)
+    # int64 prefix arithmetic happens in host numpy (x64-independent);
+    # narrow stays on device
+    dt = np.dtype(dtype)
+    if dt.itemsize > 4:
+        src = np.asarray(src) + dt.type(chunk.src_prefix << n_s)
+        dst = np.asarray(dst) + dt.type(chunk.dst_prefix << m_s)
+    else:
+        src = src + (chunk.src_prefix << n_s)
+        dst = dst + (chunk.dst_prefix << m_s)
     return src, dst
 
 
 def sample_graph_chunked(key, fit: KroneckerFit, k_pref: int = 2,
                          rng: Optional[np.random.Generator] = None,
                          thetas: Optional[np.ndarray] = None,
-                         dtype=jnp.int32):
+                         dtype=jnp.int32, backend: Optional[str] = None):
     """Full graph via chunk concatenation (memory-bounded generation).
 
     θ-noise is derived exactly once (from ``rng`` or, failing that, from
@@ -185,13 +185,20 @@ def sample_graph_chunked(key, fit: KroneckerFit, k_pref: int = 2,
     """
     if thetas is None:
         thetas = derive_thetas(fit, rng=rng, key=key)
+    # pin 'auto' once for the whole plan: per-chunk resolution could mix
+    # engines (sub-block chunks fall back to xla on TPU) and break the
+    # chunked == streamed golden-seed equivalence
+    if backend is not None:
+        backend = sampler_mod.resolve_backend(backend, fit.E).name
     chunks = chunk_plan(fit, k_pref, thetas)
     srcs, dsts = [], []
     for ck in chunks:
         s, d = sample_chunk(chunk_key(key, ck.index), fit, ck, k_pref,
-                            thetas, dtype)
+                            thetas, dtype, backend)
         srcs.append(s)
         dsts.append(d)
+    if np.dtype(dtype).itemsize > 4:    # host-resident wide ids
+        return np.concatenate(srcs), np.concatenate(dsts)
     return jnp.concatenate(srcs), jnp.concatenate(dsts)
 
 

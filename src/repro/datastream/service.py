@@ -2,8 +2,9 @@
 
 Wires the ``ChunkScheduler`` and ``ShardWriter`` to either
 
-* ``mode="chunks"`` — the local chunked sampler (``rmat.sample_chunk``),
-  one shard = a run of id-disjoint prefix chunks; or
+* ``mode="chunks"`` — the local chunked sampler (``rmat.sample_chunk``
+  through the ``repro.core.sampler`` engine backend recorded in the
+  manifest), one shard = a run of id-disjoint prefix chunks; or
 * ``mode="device_steps"`` — ``core.distributed_gen.device_generate`` over
   the full device mesh, one shard = one generation step with
   step-indexed seeds (resumption-deterministic).  NOTE: this is the
@@ -32,6 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rmat
+from repro.core.descend import (check_id_capacity, combine_ids,
+                                default_id_dtype)
+from repro.core.sampler import get_backend, resolve_backend
 from repro.core.structure import KroneckerFit
 from repro.datastream.reader import ShardedGraphDataset
 from repro.datastream.scheduler import ChunkScheduler
@@ -40,6 +44,13 @@ from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter,
 from repro.graph.ops import Graph
 
 _FEATURE_SALT = 0xFEA7
+
+#: stream marker recorded for device_steps manifests: the shard_map body
+#: now draws all L level keys with one split (shared descend core), a
+#: different threefry stream than the pre-engine iterative key chain —
+#: resuming an old device_steps dataset must refuse, not silently mix
+#: streams.  Bump when the device stream changes again.
+_DEVICE_STREAM = "device_descend_v2"
 
 
 @dataclasses.dataclass
@@ -88,15 +99,16 @@ def _compact_subgraph(src: np.ndarray, dst: np.ndarray,
     return Graph(si, di, len(ids), len(ids), bipartite=False)
 
 
-def _edge_dtype(fit: KroneckerFit):
+def _edge_dtype(fit: KroneckerFit, id_dtype=None):
+    """Auto int32/int64 by fit size, or validate an explicit request.
+
+    int64 ids need no jax x64: the chunks path samples through the
+    engine's (hi, lo) int32-pair descend and combines on host."""
     bits = max(fit.n, fit.m)
-    if bits <= 31:
-        return jnp.int32
-    if not jax.config.jax_enable_x64:
-        raise ValueError(
-            f"fit needs {bits}-bit node ids; enable jax x64 "
-            "(JAX_ENABLE_X64=1) to generate above 2^31 nodes")
-    return jnp.int64
+    dt = (default_id_dtype(bits) if id_dtype is None
+          else np.dtype(id_dtype))
+    check_id_capacity(bits, dt, "DatasetJob id space")
+    return dt
 
 
 class DatasetJob:
@@ -106,7 +118,8 @@ class DatasetJob:
                  shard_edges: int = 1 << 20, seed: int = 0,
                  k_pref: Optional[int] = None, num_workers: int = 1,
                  double_buffered: bool = True, mode: str = "chunks",
-                 features: Optional[FeatureSpec] = None):
+                 features: Optional[FeatureSpec] = None,
+                 backend: Optional[str] = None, id_dtype=None):
         assert mode in ("chunks", "device_steps"), mode
         self.fit = fit
         self.out_dir = out_dir
@@ -116,7 +129,36 @@ class DatasetJob:
         self.double_buffered = double_buffered
         self.mode = mode
         self.features = features
-        self.dtype = _edge_dtype(fit)
+        self.dtype = _edge_dtype(fit, id_dtype)
+        # resolve the engine backend by name at plan time: the chosen
+        # name is recorded in the manifest (streams differ per backend,
+        # so a resume on a different host must not silently switch).
+        # device_steps has its own sampling path — the marker names its
+        # stream so a resume across stream-changing upgrades refuses.
+        if mode == "device_steps":
+            if backend not in (None, "auto"):
+                raise ValueError(
+                    "mode='device_steps' generates through "
+                    "core.distributed_gen, not a sampler backend — "
+                    f"drop backend={backend!r} or use mode='chunks'")
+            self.backend = _DEVICE_STREAM
+            if np.dtype(self.dtype).itemsize > 4 \
+                    and not jax.config.jax_enable_x64:
+                # same fail-early rule as backend availability: don't
+                # let plan() write a manifest this host cannot run
+                raise ValueError(
+                    "mode='device_steps' composes int64 ids on-device "
+                    "and needs jax x64 (JAX_ENABLE_X64=1); use "
+                    "mode='chunks' for wide ids without x64")
+        else:
+            be = resolve_backend(backend, int(shard_edges))
+            if not be.available():
+                # fail before a manifest pinning an unrunnable backend
+                # lands on disk
+                raise ValueError(
+                    f"edge-sampler backend {be.name!r} is unavailable on "
+                    f"this host: {be.why_unavailable()}")
+            self.backend = be.name
         self.scheduler = ChunkScheduler(
             fit, shard_edges=self.shard_edges, k_pref=k_pref,
             num_workers=self.num_workers, seed=self.seed)
@@ -145,6 +187,7 @@ class DatasetJob:
             n_dst=2 ** self.fit.m, bipartite=self.fit.bipartite,
             theta=[[float(x) for x in row] for row in self.scheduler.thetas],
             theta_digest=self.scheduler.theta_digest, mode=self.mode,
+            backend=self.backend,
             n_dev=(len(jax.devices()) if self.mode == "device_steps"
                    else None),
             features=self.features.describe() if self.features else None,
@@ -221,7 +264,12 @@ class DatasetJob:
     # -- generation backends ----------------------------------------------
     def _generate_shard_chunks(self, rec: ShardRecord
                                ) -> Dict[str, np.ndarray]:
-        """Double-buffered chunk loop into a preallocated shard buffer."""
+        """Double-buffered chunk loop into a preallocated shard buffer.
+
+        Wide (int64) ids dispatch the backend's device-resident
+        ``(hi, lo)`` id words and combine them host-side in ``flush`` —
+        combining inside dispatch would force a device sync per chunk
+        and silently serialize the double-buffered pump."""
         sched = self.scheduler
         np_dtype = np.dtype(self.dtype)
         src_buf = np.empty(rec.n_edges, np_dtype)
@@ -229,15 +277,32 @@ class DatasetJob:
         chunks = [sched.chunk(i) for i in rec.chunk_indices]
         offsets = dict(zip(rec.chunk_indices,
                            np.cumsum([0] + [c.n_edges for c in chunks])))
+        wide = np_dtype.itemsize > 4
+        if wide:
+            be = get_backend(self.backend)
+            suffix = np.asarray(sched.thetas)[self.k_pref:]
+            n_s = self.fit.n - self.k_pref
+            m_s = self.fit.m - self.k_pref
 
         def dispatch(ck):
+            if wide:
+                return be.sample_parts(sched.key_for(ck), suffix,
+                                       n_s, m_s, ck.n_edges)
             return rmat.sample_chunk(sched.key_for(ck), self.fit, ck,
                                      self.k_pref, sched.thetas,
-                                     dtype=self.dtype)
+                                     dtype=self.dtype,
+                                     backend=self.backend)
 
         def flush(ck, host):
-            s, d = host
             off = offsets[ck.index]
+            if wide:
+                sparts, dparts = host   # backend may pad past ck.n_edges
+                s = combine_ids(sparts, n_s, np_dtype,
+                                prefix=ck.src_prefix)[: ck.n_edges]
+                d = combine_ids(dparts, m_s, np_dtype,
+                                prefix=ck.dst_prefix)[: ck.n_edges]
+            else:
+                s, d = host
             src_buf[off: off + ck.n_edges] = s
             dst_buf[off: off + ck.n_edges] = d
 
@@ -262,7 +327,7 @@ class DatasetJob:
                     f"device count {n_dev} must be a power of two")
             n_loc = self.fit.n - k_dev
             epd = math.ceil(self.shard_edges / n_dev)
-            # full θ rows: the level loop below runs max(n_loc, m) levels
+            # full θ rows: the shared descend runs max(n_loc, m) levels
             # (dst keeps all m levels; only src loses k_dev to the device
             # prefix), so offsetting rows by k_dev would both starve the
             # last k_dev dst levels and misalign the square levels.
@@ -293,9 +358,17 @@ class DatasetJob:
     # -- resume validation -------------------------------------------------
     def _load_validated(self) -> Manifest:
         manifest = Manifest.load(self.out_dir)
+        if manifest.backend is None and manifest.mode == "chunks":
+            # pre-engine manifest: its sample_chunk stream is bit-for-bit
+            # the engine's "xla" backend, so those resumes stay legal
+            manifest.backend = "xla"
         want = {"fit": dataclasses.asdict(self.fit), "seed": self.seed,
                 "k_pref": self.k_pref, "shard_edges": self.shard_edges,
                 "mode": self.mode,
+                # PRNG streams differ per engine backend
+                "backend": self.backend,
+                # a resumed job must keep writing the planned id width
+                "dtype": np.dtype(self.dtype).name,
                 "theta_digest": self.scheduler.theta_digest,
                 # step seeds and per-device shapes depend on mesh size
                 "n_dev": (len(jax.devices())

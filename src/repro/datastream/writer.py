@@ -95,6 +95,10 @@ class Manifest:
     theta: List[List[float]]            # per-level θ actually used
     theta_digest: str
     mode: str = "chunks"                # chunks | device_steps
+    backend: Optional[str] = None       # PRNG stream marker: sampler
+                                        # backend name (chunks mode) or
+                                        # the device stream tag; resume
+                                        # validates it (streams differ)
     n_dev: Optional[int] = None         # device_steps: mesh size the
                                         # step seeds/shapes depend on
     features: Optional[dict] = None     # {"n_cont": int, "cat_cards": [...]}

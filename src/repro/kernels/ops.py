@@ -3,6 +3,11 @@
 On CPU (this container) the kernels execute via ``interpret=True``;
 on TPU set ``interpret=False`` (and prefer ``rmat_sample_prng`` which keeps
 PRNG bits in VMEM).  ``backend_interpret()`` picks automatically.
+
+These wrappers keep the historical narrow (≤31-bit id) ``(src, dst)``
+int32 contract.  Wide ids and device/size auto-selection live one layer
+up, in ``repro.core.sampler`` — the unified edge-sampler engine that all
+production paths route through.
 """
 from __future__ import annotations
 
@@ -11,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.descend import LO_BITS
 from repro.kernels import flash_attention as fa
 from repro.kernels import rmat_sample as rs
 
@@ -19,16 +25,32 @@ def backend_interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def _narrow(parts_pair):
+    src, dst = parts_pair
+    return src.lo, dst.lo
+
+
+def _require_narrow(n: int, m: int) -> None:
+    # a bare assert would vanish under python -O and silently drop the
+    # hi id-words; n/m are static, so this costs one trace-time check
+    if n > LO_BITS or m > LO_BITS:
+        raise ValueError(f"ids need {max(n, m)} bits — wide ids go "
+                         "through repro.core.sampler (id_dtype=int64)")
+
+
 @functools.partial(jax.jit, static_argnames=("n", "m", "block", "interpret"))
 def rmat_edges(thetas, uniforms, *, n: int, m: int,
                block: int = rs.DEFAULT_BLOCK, interpret: bool = True):
-    return rs.rmat_sample_uniforms(thetas, uniforms, n, m, block, interpret)
+    _require_narrow(n, m)
+    return _narrow(rs.rmat_sample_uniforms(thetas, uniforms, n, m, block,
+                                           interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("n", "m", "block", "interpret"))
 def rmat_edges_bits(thetas, bits, *, n: int, m: int,
                     block: int = rs.DEFAULT_BLOCK, interpret: bool = True):
-    return rs.rmat_sample_bits(thetas, bits, n, m, block, interpret)
+    _require_narrow(n, m)
+    return _narrow(rs.rmat_sample_bits(thetas, bits, n, m, block, interpret))
 
 
 def rmat_edges_from_key(key, thetas, *, n: int, m: int, n_edges: int,

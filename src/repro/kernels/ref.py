@@ -1,29 +1,39 @@
-"""Pure-jnp oracles for every Pallas kernel (correctness ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (correctness ground truth).
+
+``rmat_ref`` drives the repo-wide shared decision core
+(``repro.core.descend.descend``) with plain jnp indexing — no Pallas
+tiling, blocking, or VMEM plumbing — so kernel parity tests validate
+exactly that plumbing (BlockSpecs, grids, the in-kernel bit→uniform
+conversion), while the level-bit logic itself exists once in the repo.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descend import (LO_BITS, check_id_capacity, combine_ids,
+                                descend)
 
 
-def rmat_ref(thetas, uniforms, n: int, m: int):
-    """Oracle for rmat_sample_*: identical math, plain jnp."""
-    L, E = uniforms.shape
-    lv_sq = min(n, m)
-    src = jnp.zeros((E,), jnp.int32)
-    dst = jnp.zeros((E,), jnp.int32)
-    for ell in range(max(n, m)):
-        u = uniforms[ell]
-        a, b, c = thetas[ell, 0], thetas[ell, 1], thetas[ell, 2]
-        if ell < lv_sq:
-            sb = (u >= a + b).astype(jnp.int32)
-            db = (((u >= a) & (u < a + b)) | (u >= a + b + c)).astype(jnp.int32)
-            src = src * 2 + sb
-            dst = dst * 2 + db
-        elif n > m:
-            src = src * 2 + (u >= a + b).astype(jnp.int32)
-        else:
-            dst = dst * 2 + (u >= a + c).astype(jnp.int32)
-    return src, dst
+def rmat_ref(thetas, uniforms, n: int, m: int, id_dtype=jnp.int32):
+    """Oracle for rmat_sample_*: identical math, plain jnp.
+
+    Narrow ids return int32 device arrays (the historical contract); when
+    ``n``/``m`` exceed 31 bits the (hi, lo) words are combined on host
+    into ``id_dtype`` (pass np.int64).
+    """
+    E = uniforms.shape[1]
+    src, dst = descend(lambda ell: uniforms[ell],
+                       lambda ell: (thetas[ell, 0], thetas[ell, 1],
+                                    thetas[ell, 2]),
+                       n, m, lambda: jnp.zeros((E,), jnp.int32))
+    if n <= LO_BITS and m <= LO_BITS:
+        return src.lo.astype(id_dtype), dst.lo.astype(id_dtype)
+    dt = np.dtype(id_dtype)
+    check_id_capacity(n, dt, "rmat_ref (src levels)")
+    check_id_capacity(m, dt, "rmat_ref (dst levels)")
+    return combine_ids(src, n, dt), combine_ids(dst, m, dt)
 
 
 def bits_to_uniform_ref(bits):

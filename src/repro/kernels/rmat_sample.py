@@ -6,17 +6,24 @@ tiled into VMEM blocks; the per-level bit decision is a vectorized
 predicated add over 8×128 lanes — no gathers, no divergence.  Uniform
 layout is ``(L, BLK)`` so each level reads one contiguous VMEM row.
 
-Three variants share the same decision logic (``_descend``):
+The decision logic is the repo-wide shared core
+(``repro.core.descend.descend``); three kernel variants differ only in
+where their uniforms come from:
 
-* ``rmat_kernel_uniforms``   — uniforms streamed from HBM (memory-bound
+* ``rmat_sample_uniforms``   — uniforms streamed from HBM (memory-bound
   baseline: 4·L bytes/edge).  Validated in interpret mode vs ``ref.py``.
-* ``rmat_kernel_bits``       — raw uint32 bits from HBM, converted in-VMEM
+* ``rmat_sample_bits``       — raw uint32 bits from HBM, converted in-VMEM
   (validates the bit→uniform conversion used by the PRNG variant).
-* ``rmat_kernel_prng``       — TPU-only: ``pltpu.prng_random_bits``
+* ``rmat_sample_prng``       — TPU-only: ``pltpu.prng_random_bits``
   generates bits in VMEM (§Perf optimized variant: HBM traffic drops ~L×
-  to the 8-byte edge output).  ``pltpu.prng_*`` has no CPU interpret rule,
-  so this variant is compile-gated to TPU; its post-bits logic is exactly
-  ``rmat_kernel_bits``'s.
+  to the edge output).  ``pltpu.prng_*`` has no CPU interpret rule, so
+  this variant is compile-gated to TPU; its post-bits logic is exactly
+  ``rmat_sample_bits``'s.
+
+Node ids above 31 bits: TPUs have no native int64, so each wide id is
+emitted as an ``IdParts(hi, lo)`` pair of int32 output refs and combined
+outside the kernel (``repro.core.descend.combine_ids``).  All variants
+return ``(src, dst)`` as ``IdParts`` — narrow callers read ``.lo``.
 """
 from __future__ import annotations
 
@@ -26,6 +33,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.descend import LO_BITS, IdParts, descend
 
 try:  # pltpu only needed for the PRNG variant
     from jax.experimental.pallas import tpu as pltpu
@@ -43,124 +52,124 @@ def _bits_to_uniform(bits):
     return f - 1.0
 
 
-def _descend(get_u, theta_ref, n: int, m: int, block: int):
-    """Shared level loop: consume one uniform row per level, push bits."""
-    lv_sq = min(n, m)
-    src = jnp.zeros((block,), jnp.int32)
-    dst = jnp.zeros((block,), jnp.int32)
-    for ell in range(max(n, m)):
-        u = get_u(ell)
-        a = theta_ref[ell, 0]
-        b = theta_ref[ell, 1]
-        c = theta_ref[ell, 2]
-        if ell < lv_sq:
-            sb = (u >= a + b).astype(jnp.int32)
-            db = jnp.logical_or(jnp.logical_and(u >= a, u < a + b),
-                                u >= a + b + c).astype(jnp.int32)
-            src = src * 2 + sb
-            dst = dst * 2 + db
-        elif n > m:
-            src = src * 2 + (u >= a + b).astype(jnp.int32)
-        else:
-            dst = dst * 2 + (u >= a + c).astype(jnp.int32)
-    return src, dst
+def _theta_at(theta_ref):
+    return lambda ell: (theta_ref[ell, 0], theta_ref[ell, 1],
+                        theta_ref[ell, 2])
 
 
-def _kernel_uniforms(theta_ref, u_ref, src_ref, dst_ref, *, n, m, block):
-    src, dst = _descend(lambda ell: u_ref[ell, :], theta_ref, n, m, block)
-    src_ref[:] = src
-    dst_ref[:] = dst
+def _run_descend(get_u, theta_ref, n, m, block, out_refs):
+    """Shared core + scatter of the (hi?, lo) words into the output refs."""
+    src, dst = descend(get_u, _theta_at(theta_ref), n, m,
+                       lambda: jnp.zeros((block,), jnp.int32))
+    vals = [v for v in (src.hi, src.lo, dst.hi, dst.lo) if v is not None]
+    for ref, val in zip(out_refs, vals):
+        ref[:] = val
 
 
-def _kernel_bits(theta_ref, bits_ref, src_ref, dst_ref, *, n, m, block):
-    src, dst = _descend(lambda ell: _bits_to_uniform(bits_ref[ell, :]),
-                        theta_ref, n, m, block)
-    src_ref[:] = src
-    dst_ref[:] = dst
+def _kernel_uniforms(theta_ref, u_ref, *out_refs, n, m, block):
+    _run_descend(lambda ell: u_ref[ell, :], theta_ref, n, m, block, out_refs)
 
 
-def _kernel_prng(seed_ref, theta_ref, src_ref, dst_ref, *, n, m, block):
-    """TPU-only: per-block seed fold-in, bits generated in VMEM."""
+def _kernel_bits(theta_ref, bits_ref, *out_refs, n, m, block):
+    _run_descend(lambda ell: _bits_to_uniform(bits_ref[ell, :]),
+                 theta_ref, n, m, block, out_refs)
+
+
+def _kernel_prng(seed_ref, theta_ref, *out_refs, n, m, block):
+    """TPU-only: bits generated in VMEM.  The PRNG is seeded with both
+    32-bit key words plus the block index, so block streams are disjoint
+    across blocks AND across calls (a single 31-bit base + pid offset
+    would let different calls' seed intervals overlap)."""
     pid = pl.program_id(0)
-    pltpu.prng_seed(seed_ref[0] + pid)
+    pltpu.prng_seed(seed_ref[0], seed_ref[1], pid)
     L = max(n, m)
     bits = pltpu.prng_random_bits((L, block))
+    _run_descend(lambda ell: _bits_to_uniform(bits[ell, :]),
+                 theta_ref, n, m, block, out_refs)
 
-    src, dst = _descend(lambda ell: _bits_to_uniform(bits[ell, :]),
-                        theta_ref, n, m, block)
-    src_ref[:] = src
-    dst_ref[:] = dst
+
+def _out_layout(n: int, m: int, E: int, block: int):
+    """(specs, shapes, packer) for the 2–4 int32 id-word outputs."""
+    wide_src, wide_dst = n > LO_BITS, m > LO_BITS
+    k = 2 + wide_src + wide_dst
+    specs = [pl.BlockSpec((block,), lambda i: (i,)) for _ in range(k)]
+    shapes = [jax.ShapeDtypeStruct((E,), jnp.int32) for _ in range(k)]
+
+    def pack(outs) -> Tuple[IdParts, IdParts]:
+        it = iter(outs)
+        src_hi = next(it) if wide_src else None
+        src_lo = next(it)
+        dst_hi = next(it) if wide_dst else None
+        dst_lo = next(it)
+        return IdParts(src_hi, src_lo), IdParts(dst_hi, dst_lo)
+
+    return specs, shapes, pack
 
 
 def rmat_sample_uniforms(thetas, uniforms, n: int, m: int,
                          block: int = DEFAULT_BLOCK, interpret: bool = True
-                         ) -> Tuple[jax.Array, jax.Array]:
+                         ) -> Tuple[IdParts, IdParts]:
     """thetas: (L,4) f32; uniforms: (L, E) f32.  E % block == 0."""
     L, E = uniforms.shape
     assert E % block == 0, (E, block)
     grid = (E // block,)
     kern = functools.partial(_kernel_uniforms, n=n, m=m, block=block)
-    return pl.pallas_call(
+    specs, shapes, pack = _out_layout(n, m, E, block)
+    outs = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((L, 4), lambda i: (0, 0)),
             pl.BlockSpec((L, block), lambda i: (0, i)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((E,), jnp.int32),
-                   jax.ShapeDtypeStruct((E,), jnp.int32)],
+        out_specs=specs,
+        out_shape=shapes,
         interpret=interpret,
     )(thetas, uniforms)
+    return pack(outs)
 
 
 def rmat_sample_bits(thetas, bits, n: int, m: int,
                      block: int = DEFAULT_BLOCK, interpret: bool = True
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     ) -> Tuple[IdParts, IdParts]:
     """thetas: (L,4) f32; bits: (L, E) uint32."""
     L, E = bits.shape
     assert E % block == 0, (E, block)
     kern = functools.partial(_kernel_bits, n=n, m=m, block=block)
-    return pl.pallas_call(
+    specs, shapes, pack = _out_layout(n, m, E, block)
+    outs = pl.pallas_call(
         kern,
         grid=(E // block,),
         in_specs=[
             pl.BlockSpec((L, 4), lambda i: (0, 0)),
             pl.BlockSpec((L, block), lambda i: (0, i)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((E,), jnp.int32),
-                   jax.ShapeDtypeStruct((E,), jnp.int32)],
+        out_specs=specs,
+        out_shape=shapes,
         interpret=interpret,
     )(thetas, bits)
+    return pack(outs)
 
 
 def rmat_sample_prng(seed, thetas, n: int, m: int, n_edges: int,
                      block: int = DEFAULT_BLOCK
-                     ) -> Tuple[jax.Array, jax.Array]:
-    """TPU-only fast path (no HBM uniform traffic).  seed: (1,) int32."""
+                     ) -> Tuple[IdParts, IdParts]:
+    """TPU-only fast path (no HBM uniform traffic).  seed: (2,) int32
+    (the PRNG-key words; see ``_kernel_prng``)."""
     assert pltpu is not None, "requires TPU pallas"
     L = max(n, m)
     assert n_edges % block == 0
     kern = functools.partial(_kernel_prng, n=n, m=m, block=block)
-    return pl.pallas_call(
+    specs, shapes, pack = _out_layout(n, m, n_edges, block)
+    outs = pl.pallas_call(
         kern,
         grid=(n_edges // block,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((L, 4), lambda i: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((n_edges,), jnp.int32),
-                   jax.ShapeDtypeStruct((n_edges,), jnp.int32)],
+        out_specs=specs,
+        out_shape=shapes,
         interpret=False,
     )(seed, thetas)
+    return pack(outs)
