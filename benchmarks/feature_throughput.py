@@ -1,0 +1,160 @@
+"""Feature/alignment hot-path throughput: rows/s for codec decode, GAN
+sampling, GBDT inference and rank-match alignment — numpy reference vs
+the batched jit engine (``repro.core.feature_engine``).
+
+Emits ``results/bench/BENCH_features.json``.  The engine sides run a
+full 2^20-row shard (fast mode: 2^16); the reference sides (per-row
+``rng.choice`` decode, per-tree Python-loop ``predict_np``) are measured
+on a capped row count and reported as rows/s, since running them at
+shard scale is exactly the bottleneck this engine removes.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.aligner import AlignerConfig, GBDTAligner
+from repro.core.features import GANConfig, GANFeatureGenerator
+from repro.core.gbdt import GBDTConfig
+from repro.graph.ops import Graph
+from repro.tabular.schema import infer_schema
+
+OUT_DIR = "results/bench"
+
+
+def _rows_per_sec(fn, n_rows, repeats=3):
+    # common.timeit: 1 warmup call (pays jit compile), median µs/call
+    return n_rows / (timeit(fn, repeats=repeats) / 1e6)
+
+
+def _stage(ref_fn, ref_rows, engine_fn, engine_rows, repeats):
+    r = {"reference_rows": ref_rows, "engine_rows": engine_rows,
+         "reference_rows_per_s": _rows_per_sec(ref_fn, ref_rows, repeats),
+         "engine_rows_per_s": _rows_per_sec(engine_fn, engine_rows, repeats)}
+    r["speedup_vs_reference"] = (r["engine_rows_per_s"]
+                                 / r["reference_rows_per_s"])
+    return r
+
+
+def _train_table(rng, n=4000):
+    comp = rng.integers(0, 2, n)
+    c0 = np.where(comp == 0, rng.normal(-3, .5, n), rng.normal(4, 1., n))
+    cont = np.stack([c0, rng.exponential(2., n)], 1).astype(np.float32)
+    cat = np.stack([comp, rng.integers(0, 8, n)], 1).astype(np.int32)
+    return cont, cat
+
+
+def run(fast: bool = True) -> dict:
+    n = 1 << 16 if fast else 1 << 20          # engine-side shard size
+    n_ref = 1 << 11 if fast else 1 << 13      # reference-side cap
+    reps = 3 if fast else 2
+    batch = min(n, 1 << 16)
+    rng = np.random.default_rng(0)
+    cont, cat = _train_table(rng)
+    schema = infer_schema(cont, cat)
+
+    gen = GANFeatureGenerator(schema, GANConfig(batch=128)).fit(
+        cont, cat, steps=60, seed=0)
+    codec = gen.codec
+
+    # one shard's worth of activated generator output, decoded many ways
+    import jax
+    from repro.core.features import _mlp
+    key = jax.random.PRNGKey(1)
+    z = jax.random.normal(key, (n, gen.cfg.d_z))
+    raw = np.asarray(gen._activate(_mlp(gen.params["g"], z, key, 0.0,
+                                        False)))
+
+    res = {"rows": n, "reference_rows": n_ref, "batch": batch}
+
+    dec = codec.batched(batch)
+    res["decode"] = _stage(
+        lambda: codec.decode_reference(raw[:n_ref],
+                                       np.random.default_rng(2)), n_ref,
+        lambda: dec.decode(raw, np.random.default_rng(2)), n, reps)
+    res["decode"]["numpy_rows_per_s"] = _rows_per_sec(
+        lambda: codec.decode(raw, np.random.default_rng(2)), n, reps)
+
+    def _sample_reference():
+        # pre-PR sample: one giant unbatched MLP call + per-row decode
+        r = np.random.default_rng(3)
+        k = jax.random.PRNGKey(int(r.integers(2 ** 31)))
+        kz, kg = jax.random.split(k)
+        z = jax.random.normal(kz, (n_ref, gen.cfg.d_z))
+        out = gen._activate(_mlp(gen.params["g"], z, kg, 0.0, False))
+        return codec.decode_reference(np.asarray(out), r)
+
+    res["gan_sample"] = _stage(
+        _sample_reference, n_ref,
+        lambda: gen.sample(np.random.default_rng(3), n, batch=batch), n,
+        reps)
+
+    # aligner fit on a planted structure↔feature coupling (the regime the
+    # aligner exists for): first cont column is a function of src degree
+    n_fit_edges = 4000
+    g_fit = Graph(rng.integers(0, 512, n_fit_edges).astype(np.int32),
+                  rng.integers(0, 512, n_fit_edges).astype(np.int32),
+                  512, 512)
+    deg = np.bincount(np.asarray(g_fit.src), minlength=512)
+    cont_fit = cont[:n_fit_edges].copy()
+    cont_fit[:, 0] = (np.log1p(deg[np.asarray(g_fit.src)])
+                      + 0.01 * rng.normal(size=n_fit_edges))
+    al = GBDTAligner(schema, AlignerConfig(gbdt=GBDTConfig(n_rounds=100)),
+                     kind="edge").fit(g_fit, cont_fit, cat[:n_fit_edges])
+    g_big = Graph(rng.integers(0, 1 << 14, n).astype(np.int32),
+                  rng.integers(0, 1 << 14, n).astype(np.int32),
+                  1 << 14, 1 << 14)
+    X_big = al._inputs(g_big)
+
+    def _predict_np_reference(X):
+        cols = [m.predict_np(X) for m in al.cont_models]
+        cols += [mdl.predict_np(X).astype(np.float32)
+                 for mdl in al.cat_models if mdl is not None]
+        return np.stack(cols, 1)
+
+    # full per-column stack; capped row count (align only scores the two
+    # key columns — this stage times the all-columns predict)
+    n_pred = min(n, 1 << 18)
+    res["gbdt_predict"] = _stage(
+        lambda: _predict_np_reference(X_big[:n_ref]), n_ref,
+        lambda: al.predict_rows(X_big[:n_pred], batch=batch), n_pred, reps)
+
+    rows_c, rows_k = gen.sample(np.random.default_rng(4), n, batch=batch)
+    g_ref = Graph(rng.integers(0, max(2, n_ref // 4),
+                               n_ref).astype(np.int32),
+                  rng.integers(0, max(2, n_ref // 4),
+                               n_ref).astype(np.int32),
+                  max(2, n_ref // 4), max(2, n_ref // 4))
+
+    def _align_reference():
+        # pre-PR align, end to end: structural inputs + full predict_np
+        # stack + rank match
+        pred = _predict_np_reference(np.asarray(al._inputs(g_ref),
+                                                np.float32))
+        al._match_keys(pred, al._rows_matrix(rows_c[:n_ref], rows_k[:n_ref]),
+                       np.random.default_rng(5))
+
+    res["align"] = _stage(
+        _align_reference, n_ref,
+        lambda: al.align(g_big, rows_c, rows_k,
+                         np.random.default_rng(5), batch=batch), n, reps)
+
+    for stage, r in res.items():
+        if not isinstance(r, dict):
+            continue
+        # 3 clean comma-separated fields like every other table module
+        print(f"features/{stage}_engine,0.0,{r['engine_rows_per_s']:.0f} "
+              f"rows/s ({r['speedup_vs_reference']:.1f}x ref)")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "BENCH_features.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    run(fast="--full" not in sys.argv)

@@ -23,6 +23,7 @@ TABLES = [
     "gnn_throughput",
     "roofline",
     "datastream_throughput",
+    "feature_throughput",
 ]
 
 

@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.feature_engine import batched_rows
 from repro.core.gbdt import GBDTClassifier, GBDTConfig, GBDTRegressor
 from repro.graph.ops import Graph, node_features
 from repro.tabular.schema import TableSchema
@@ -43,11 +44,15 @@ def _standardize(x, mu=None, sd=None):
 class GBDTAligner:
     """Per-column GBDT predictor + rank matching."""
 
-    def __init__(self, schema: TableSchema, cfg: AlignerConfig = AlignerConfig(),
-                 kind: str = "edge"):
+    #: inference runs through the batched jax engine — see
+    #: ``GANFeatureGenerator.engine_batched``
+    engine_batched = True
+
+    def __init__(self, schema: TableSchema,
+                 cfg: Optional[AlignerConfig] = None, kind: str = "edge"):
         assert kind in ("edge", "node")
         self.schema = schema
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else AlignerConfig()
         self.kind = kind
         self.cont_models: List[GBDTRegressor] = []
         self.cat_models: List[Optional[GBDTClassifier]] = []
@@ -67,14 +72,23 @@ class GBDTAligner:
         n = min(len(X), len(cont) if cont.size else len(X),
                 len(cat) if cat.size else len(X))
         X = X[:n]
-        # 80/20 split: holdout quality scores drive the matching hierarchy
+        # 80/20 split: holdout quality scores drive the matching hierarchy.
+        # Tiny inputs can leave the holdout empty (n_tr == n); a mean over
+        # an empty slice is NaN and NaN sorts FIRST under argsort[::-1],
+        # poisoning the primary-column choice — fall back to a neutral
+        # mid-scale quality instead.
         n_tr = max(1, int(n * 0.8))
+        no_holdout = n_tr >= n
         self.col_quality: List[float] = []
         self.cont_models = []
         for j in range(self.schema.n_cont):
             m = GBDTRegressor(self.cfg.gbdt).fit(X[:n_tr], cont[:n_tr, j])
             self.cont_models.append(m)
-            y, p = cont[n_tr:n, j], m.predict_np(X[n_tr:n])
+            if no_holdout:
+                self.col_quality.append(0.5)
+                continue
+            y = cont[n_tr:n, j]
+            p = np.asarray(m.predict(X[n_tr:n]))
             var = y.var() + 1e-12
             self.col_quality.append(
                 float(max(0.0, 1.0 - ((p - y) ** 2).mean() / var)))
@@ -84,8 +98,11 @@ class GBDTAligner:
                 m = GBDTClassifier(card, self.cfg.gbdt).fit(X[:n_tr],
                                                             cat[:n_tr, j])
                 self.cat_models.append(m)
+                if no_holdout:
+                    self.col_quality.append(0.5)
+                    continue
                 y = cat[n_tr:n, j]
-                acc = float((m.predict_np(X[n_tr:n]) == y).mean())
+                acc = float((np.asarray(m.predict(X[n_tr:n])) == y).mean())
                 base = max(np.bincount(y, minlength=card)) / max(len(y), 1)
                 self.col_quality.append(max(0.0, acc - float(base)))
             else:
@@ -93,23 +110,84 @@ class GBDTAligner:
         return self
 
     # -- predict + rank match ----------------------------------------------
-    def predict(self, g: Graph) -> np.ndarray:
-        """x̂ per edge/node: concat of predicted cont cols + cat class ids."""
-        X = self._inputs(g)
-        cols = [m.predict_np(X) for m in self.cont_models]
-        for mdl in self.cat_models:
-            if mdl is not None:
-                cols.append(mdl.predict_np(X).astype(np.float32))
-        if not cols:
+    def predict(self, g: Graph, batch: Optional[int] = None) -> np.ndarray:
+        """x̂ per edge/node: concat of predicted cont cols + cat class ids.
+
+        Inference runs through the packed jit forests (``GBDTRegressor
+        .predict`` scan, ``GBDTClassifier`` multi-output scan), not the
+        per-tree Python loops of ``predict_np``; ``batch`` pads rows to a
+        fixed block size so the jit traces once per shard shape."""
+        return self.predict_rows(self._inputs(g), batch=batch)
+
+    def predict_rows(self, X: np.ndarray, batch: Optional[int] = None
+                     ) -> np.ndarray:
+        X = np.asarray(X, np.float32)
+        n_cols = (len(self.cont_models)
+                  + sum(m is not None for m in self.cat_models))
+        if not n_cols:
             return np.zeros((len(X), 1), np.float32)
-        return np.stack(cols, 1)
+        return np.stack([self._predict_col(X, ci, batch)
+                         for ci in range(n_cols)], 1)
+
+    # -- key columns ---------------------------------------------------------
+    def _col_costs(self) -> List[int]:
+        """Forest count behind each column (a regressor is 1 forest, a
+        C-class classifier is C one-vs-rest forests)."""
+        return ([1] * len(self.cont_models)
+                + [m.n_classes for m in self.cat_models if m is not None])
+
+    def _key_order(self) -> Tuple[int, int]:
+        """(primary, secondary) column indices by holdout quality; ties
+        break toward the cheapest predictor (fewest forests), then the
+        lowest column index, so uninformative-quality fits don't pick an
+        expensive multi-class key by accident.  With a single column the
+        primary doubles as tie-breaker."""
+        if not self.col_quality:
+            return 0, 0
+        cost = self._col_costs()
+        order_cols = sorted(range(len(self.col_quality)),
+                            key=lambda i: (-self.col_quality[i], cost[i], i))
+        prim = order_cols[0]
+        sec = order_cols[1] if len(order_cols) > 1 else prim
+        return prim, sec
+
+    def _predict_col(self, X: np.ndarray, ci: int,
+                     batch: Optional[int] = None) -> np.ndarray:
+        """One column of :meth:`predict` without scoring the others."""
+        specs = ([m.predict for m in self.cont_models]
+                 + [m.predict for m in self.cat_models if m is not None])
+        if not specs:
+            return np.zeros(len(X), np.float32)
+        fn = specs[ci]
+        out = (batched_rows(fn, X, batch) if batch else np.asarray(fn(X)))
+        return out.astype(np.float32)
+
+    def _rows_col(self, cont_rows, cat_rows, ci: int) -> np.ndarray:
+        if not self.col_quality:
+            return np.zeros(len(cont_rows), np.float32)
+        if ci < self.schema.n_cont:
+            return np.asarray(cont_rows[:, ci], np.float32)
+        included = [j for j, m in enumerate(self.cat_models) if m is not None]
+        return np.asarray(cat_rows[:, included[ci - self.schema.n_cont]],
+                          np.float32)
 
     def _match_keys(self, pred: np.ndarray, rows: np.ndarray,
                     rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
-        """Hierarchical rank keys: the holdout-best column is the primary
-        sort key (bucketed at √n resolution), the second-best breaks ties
-        within buckets.  Equal-count rank-bucketing keeps both sides
-        bijective.
+        """Full-matrix API (tests/benchmarks): selects the primary and
+        secondary columns, then defers to :meth:`_match_keys_cols`."""
+        prim, sec = self._key_order()
+        q = self.col_quality[prim] if self.col_quality else 0.05
+        return self._match_keys_cols(
+            np.stack([pred[:, prim], pred[:, sec]], 1),
+            np.stack([rows[:, prim], rows[:, sec]], 1), rng, q)
+
+    def _match_keys_cols(self, pred2: np.ndarray, rows2: np.ndarray,
+                         rng: np.random.Generator, q: float
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Hierarchical rank keys over (primary, secondary) column pairs:
+        the holdout-best column is the primary sort key (bucketed at √n
+        resolution), the second-best breaks ties within buckets.
+        Equal-count rank-bucketing keeps both sides bijective.
 
         Coupling calibration: plain rank matching makes the assigned
         feature a *deterministic* (comonotone) function of the prediction,
@@ -118,36 +196,49 @@ class GBDTAligner:
         The predictor's holdout R² tells us the true coupling strength:
         ranking on ``predz + ε`` with ε ~ N(0, 1/R² − 1) makes
         corr(match key, prediction) = √R², reproducing the observed
-        sharpness in closed form."""
-        n, d = pred.shape
-        order_cols = np.argsort(self.col_quality)[::-1]
-        prim = order_cols[0]
-        sec = order_cols[1] if d > 1 else prim
+        sharpness in closed form.  ``q`` is the holdout quality of the
+        column in slot 0 (the caller picked the pair; noise calibration
+        must match the column actually used as primary key)."""
+        n = len(pred2)
         n_buckets = max(1, int(np.sqrt(n)))
-        r2 = float(np.clip(self.col_quality[prim], 0.05, 0.98))
+        r2 = float(np.clip(q, 0.05, 0.98))
         s = np.sqrt(1.0 / r2 - 1.0)
 
         def keys(mat, noise_s):
-            col = mat[:, prim]
+            col = mat[:, 0]
             sd = col.std() + 1e-9
             key = col / sd + rng.normal(0, noise_s + 1e-9, n)
             ranks = np.empty(n, np.int64)
             ranks[np.argsort(key, kind="stable")] = np.arange(n)
             bucket = ranks * n_buckets // n
-            return np.lexsort((mat[:, sec] + rng.normal(0, 1e-9, n), bucket))
+            return np.lexsort((mat[:, 1] + rng.normal(0, 1e-9, n), bucket))
 
-        return keys(pred, s), keys(rows, 0.0)
+        return keys(pred2, s), keys(rows2, 0.0)
 
     def align(self, g: Graph, cont_rows: np.ndarray, cat_rows: np.ndarray,
-              rng: Optional[np.random.Generator] = None
+              rng: Optional[np.random.Generator] = None,
+              batch: Optional[int] = None
               ) -> Tuple[np.ndarray, np.ndarray]:
         """Assign generated rows to edges (or nodes).  Returns the rows
-        permuted into edge/node order."""
+        permuted into edge/node order.  ``batch`` fixes the jit block size
+        of the GBDT inference pass (see :meth:`predict`).
+
+        Inference cost: rank matching only ever reads the primary and
+        secondary key columns, so only those (at most two) predictors are
+        evaluated — not the full per-column stack of :meth:`predict`."""
         rng = rng or np.random.default_rng(0)
-        pred = self.predict(g)
-        rows = self._rows_matrix(cont_rows, cat_rows)
-        n = min(len(pred), len(rows))
-        order_pred, order_rows = self._match_keys(pred[:n], rows[:n], rng)
+        X = np.asarray(self._inputs(g), np.float32)
+        n = min(len(X), len(cont_rows))
+        prim, sec = self._key_order()
+        p_prim = self._predict_col(X[:n], prim, batch)
+        p_sec = (p_prim if sec == prim
+                 else self._predict_col(X[:n], sec, batch))
+        pred2 = np.stack([p_prim, p_sec], 1)
+        rows2 = np.stack([self._rows_col(cont_rows[:n], cat_rows[:n], prim),
+                          self._rows_col(cont_rows[:n], cat_rows[:n], sec)],
+                         1)
+        q = self.col_quality[prim] if self.col_quality else 0.05
+        order_pred, order_rows = self._match_keys_cols(pred2, rows2, rng, q)
         perm = np.empty(n, np.int64)
         perm[order_pred] = order_rows
         return cont_rows[:n][perm], cat_rows[:n][perm]
@@ -176,6 +267,10 @@ class GBDTAligner:
 class RandomAligner:
     """Ablation baseline: random permutation of generated rows."""
 
+    #: pure numpy — the ``batch=`` kwarg is accepted for call-compat but
+    #: ignored, so datastream must NOT pin batch/device on its account
+    engine_batched = False
+
     def __init__(self, schema: TableSchema, kind: str = "edge"):
         self.schema = schema
         self.kind = kind
@@ -183,10 +278,15 @@ class RandomAligner:
     def fit(self, g, cont, cat):
         return self
 
-    def align(self, g: Graph, cont_rows, cat_rows, rng=None):
+    def align(self, g: Graph, cont_rows, cat_rows, rng=None, batch=None):
+        """``batch`` is accepted (and ignored) so the ablation path is
+        call-compatible with ``GBDTAligner.align``.  Truncates to the
+        graph's edge/node count like the GBDT path, so the ablation can't
+        return rows mismatched with the structure."""
         rng = rng or np.random.default_rng(0)
-        n = len(cont_rows)
-        perm = rng.permutation(n)
+        n_target = g.n_edges if self.kind == "edge" else g.n_nodes
+        n = min(len(cont_rows), n_target)
+        perm = rng.permutation(len(cont_rows))[:n]
         return cont_rows[perm], cat_rows[perm]
 
 

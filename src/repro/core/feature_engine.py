@@ -1,0 +1,137 @@
+"""Batched, jit-compiled feature/alignment engine (hot path of §3.3–§3.4).
+
+The decode/align stages historically ran as host numpy with per-row
+Python loops, so ``generate_streamed(include_features=True)`` was
+bottlenecked by feature decode, not by the edge sampler.  This module
+provides the device-side replacements:
+
+* :class:`BatchedDecoder` — GAN-space → table decoding with Gumbel-max
+  categorical sampling, traced once per (batch, enc_dim) shape and
+  re-used across shards.  ``decode_traceable`` is pure jnp → jnp, so the
+  GAN sampler fuses generator MLP + activation + decode into a single
+  jit call per batch.
+* :func:`batched_rows` — generic padded fixed-size-batch driver: pads a
+  row block to a multiple of ``batch`` so downstream jit functions
+  (packed GBDT forests, decoders) compile exactly once per batch shape
+  regardless of ragged shard tails.
+
+Everything here is shape-static: callers pick the batch size (the
+datastream layer derives it from ``shard_edges``), the engine pads and
+trims.  The numpy reference paths stay in ``features.py`` / ``gbdt.py``
+— equivalence is property-tested and benchmarked in
+``benchmarks/feature_throughput.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tabular import vgm as vgm_mod
+from repro.tabular.schema import TableSchema
+
+
+def batched_rows(fn: Callable, X: np.ndarray, batch: int,
+                 with_index: bool = False):
+    """Apply ``fn`` (a jit-compiled per-block function) over the rows of
+    ``X`` in fixed-size blocks of ``batch`` rows, padding the tail with
+    zeros so every call sees the same shape (one compile per batch size).
+
+    ``fn`` maps ``(batch, ...) -> (batch,)``/``(batch, k)`` or a tuple of
+    such arrays; with ``with_index=True`` it is called as ``fn(block,
+    i)`` so callers can derive per-block PRNG keys.  Outputs are
+    concatenated and trimmed back to ``len(X)`` rows.
+    """
+    call = fn if with_index else (lambda blk, i: fn(blk))
+    n = len(X)
+    if n == 0:
+        # probe one row for the output structure — never pay a full
+        # batch-sized compile+run just to return an empty slice
+        out = call(np.zeros((1,) + X.shape[1:], X.dtype), 0)
+        if isinstance(out, tuple):
+            return tuple(np.asarray(o)[:0] for o in out)
+        return np.asarray(out)[:0]
+    # honor the requested batch even when n < batch: a ragged tail shard
+    # pads up to the full block and reuses the full-shard jit trace
+    # instead of compiling a fresh (n, ...) shape
+    b = max(1, int(batch))
+    n_blocks = math.ceil(n / b)
+    pad = n_blocks * b - n
+    if pad:
+        X = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
+    outs = [call(X[i * b:(i + 1) * b], i) for i in range(n_blocks)]
+    if isinstance(outs[0], tuple):
+        return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:n]
+                     for j in range(len(outs[0])))
+    return np.concatenate([np.asarray(o) for o in outs])[:n]
+
+
+class BatchedDecoder:
+    """Vectorized GAN-output → (cont, cat) decoding on device.
+
+    Mode and category ids are drawn with Gumbel-max over the (masked)
+    probability rows — equal in distribution to per-row inverse-CDF
+    sampling, and always in-range by construction (``argmax`` over
+    ``card`` logits cannot exceed ``card - 1``).
+    """
+
+    def __init__(self, schema: TableSchema, vgms: Sequence[vgm_mod.VGMParams],
+                 n_modes: int, batch: int = 1 << 16):
+        assert len(vgms) == schema.n_cont, (len(vgms), schema.n_cont)
+        self.schema = schema
+        self.n_modes = int(n_modes)
+        self.batch = int(batch)
+        means, stds, active = vgm_mod.stack_params(vgms, schema.n_cont,
+                                                   n_modes)
+        self.means = jnp.asarray(means, jnp.float32)      # (n_cont, K)
+        self.stds = jnp.asarray(stds, jnp.float32)        # (n_cont, K)
+        self.active = jnp.asarray(active)                 # (n_cont, K) bool
+        self._jit = jax.jit(self.decode_traceable)
+
+    # -- pure jnp → jnp (usable inside a caller's jit) ----------------------
+    def decode_traceable(self, raw: jnp.ndarray, key: jax.Array
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """raw: (B, enc_dim) activated generator output → cont (B, n_cont)
+        float32, cat (B, n_cat) int32."""
+        nc, K = self.schema.n_cont, self.n_modes
+        n_draws = nc + self.schema.n_cat
+        keys = jax.random.split(key, max(n_draws, 1))
+        conts: List[jnp.ndarray] = []
+        cats: List[jnp.ndarray] = []
+        off, ki = 0, 0
+        for j in range(nc):
+            alpha = jnp.clip(raw[:, off], -1.0, 1.0)
+            probs = raw[:, off + 1: off + 1 + K]
+            logits = jnp.where(self.active[j],
+                               jnp.log(jnp.maximum(probs, 1e-9)), -jnp.inf)
+            g = jax.random.gumbel(keys[ki], probs.shape)
+            mode = jnp.argmax(logits + g, axis=1)
+            conts.append(self.means[j, mode]
+                         + alpha * 4.0 * self.stds[j, mode])
+            off += 1 + K
+            ki += 1
+        for card in self.schema.cat_cards:
+            logits = jnp.log(jnp.maximum(raw[:, off: off + card], 1e-9))
+            g = jax.random.gumbel(keys[ki], logits.shape)
+            cats.append(jnp.argmax(logits + g, axis=1).astype(jnp.int32))
+            off += card
+            ki += 1
+        cont = (jnp.stack(conts, 1).astype(jnp.float32) if conts
+                else jnp.zeros((raw.shape[0], 0), jnp.float32))
+        cat = (jnp.stack(cats, 1) if cats
+               else jnp.zeros((raw.shape[0], 0), jnp.int32))
+        return cont, cat
+
+    # -- host driver --------------------------------------------------------
+    def decode(self, raw: np.ndarray, rng: np.random.Generator,
+               batch: int = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Decode an arbitrary-length block in padded fixed-size batches;
+        the per-batch jit is traced once per batch shape."""
+        # 63-bit seed: see GANFeatureGenerator.sample
+        key = jax.random.PRNGKey(int(rng.integers(2 ** 63)))
+        return batched_rows(
+            lambda blk, i: self._jit(blk, jax.random.fold_in(key, i)),
+            np.asarray(raw), batch or self.batch, with_index=True)

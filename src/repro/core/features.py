@@ -65,7 +65,31 @@ class TableCodec:
     def decode(self, raw: np.ndarray, rng: np.random.Generator
                ) -> Tuple[np.ndarray, np.ndarray]:
         """raw: generator output (already activated: α∈[-1,1] tanh, mode/cat
-        as probabilities)."""
+        as probabilities).  Vectorized host path (the jit engine lives in
+        :meth:`batched` / ``repro.core.feature_engine``)."""
+        n = raw.shape[0]
+        cont = np.zeros((n, self.schema.n_cont), np.float32)
+        cat = np.zeros((n, self.schema.n_cat), np.int32)
+        off = 0
+        for j, p in enumerate(self.vgms):
+            alpha = raw[:, off]
+            probs = raw[:, off + 1: off + 1 + self.n_modes]
+            probs = np.where(p.active[None], np.maximum(probs, 1e-9), 0)
+            mode = _sample_rows(probs, rng)
+            cont[:, j] = vgm_mod.inverse(p, mode, np.clip(alpha, -1, 1))
+            off += 1 + self.n_modes
+        for j, card in enumerate(self.schema.cat_cards):
+            probs = np.maximum(raw[:, off: off + card], 1e-9)
+            cat[:, j] = _sample_rows(probs, rng)
+            off += card
+        return cont, cat
+
+    def decode_reference(self, raw: np.ndarray, rng: np.random.Generator
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pre-engine per-row reference decode (``rng.choice`` loop).  Kept
+        for the numpy-vs-engine equivalence tests and as the baseline side
+        of ``benchmarks/feature_throughput.py`` — do not use on the hot
+        path."""
         n = raw.shape[0]
         cont = np.zeros((n, self.schema.n_cont), np.float32)
         cat = np.zeros((n, self.schema.n_cat), np.int32)
@@ -83,9 +107,28 @@ class TableCodec:
             probs = probs / probs.sum(1, keepdims=True)
             cdf = probs.cumsum(1)
             u = rng.random((n, 1))
-            cat[:, j] = (u > cdf).sum(1)
+            cat[:, j] = np.minimum((u > cdf).sum(1), card - 1)
             off += card
         return cont, cat
+
+    def batched(self, batch: int = 1 << 16):
+        """Jit decode engine over this codec's fitted VGMs (fixed-size
+        padded batches; see ``repro.core.feature_engine``)."""
+        from repro.core.feature_engine import BatchedDecoder
+        return BatchedDecoder(self.schema, self.vgms, self.n_modes, batch)
+
+
+def _sample_rows(probs: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """One categorical draw per row, vectorized inverse-CDF.
+
+    ``u`` is scaled by each row's total mass instead of normalizing the
+    row, so float rounding in the cumsum can never push the draw past the
+    last bin (the historical ``(u > cdf).sum()`` could return ``card``
+    when ``cdf[-1] < 1``); the final clip is a belt-and-braces guard."""
+    cdf = probs.cumsum(1, dtype=np.float64)
+    u = rng.random(len(probs)) * cdf[:, -1]
+    k = (u[:, None] >= cdf).sum(1)
+    return np.minimum(k, probs.shape[1] - 1)
 
 
 # ---------------------------------------------------------------------------
@@ -153,16 +196,23 @@ class GANConfig:
     beta1: float = 0.5
     beta2: float = 0.9
     batch: int = 256
+    sample_batch: int = 1 << 16   # padded jit batch for inference draws
 
 
 class GANFeatureGenerator:
-    def __init__(self, schema: TableSchema, cfg: GANConfig = GANConfig(),
+    #: samples through the batched jax engine: the output stream depends
+    #: on the jit batch and device class (datastream records both in the
+    #: manifest; KDE/Random are pure numpy and carry no such marker)
+    engine_batched = True
+
+    def __init__(self, schema: TableSchema, cfg: Optional[GANConfig] = None,
                  n_modes: int = 5):
         self.schema = schema
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else GANConfig()
         self.codec = TableCodec(schema, n_modes)
         self.params: Optional[Dict[str, Any]] = None
         self._losses: List[Tuple[float, float]] = []
+        self._sample_cache: Dict[int, Any] = {}   # batch -> fused jit draw
 
     # -- activations applied to raw generator output ------------------------
     def _activate(self, raw):
@@ -181,6 +231,7 @@ class GANFeatureGenerator:
     def fit(self, cont: np.ndarray, cat: np.ndarray, steps: int = 300,
             seed: int = 0, verbose: bool = False) -> "GANFeatureGenerator":
         self.codec.fit(cont, cat)
+        self._sample_cache = {}    # decoders close over the fitted VGMs
         enc = jnp.asarray(self.codec.encode(cont, cat))
         denc = self.codec.enc_dim
         cfg = self.cfg
@@ -244,14 +295,49 @@ class GANFeatureGenerator:
         self.params = {"g": carry[0], "d": carry[1]}
         return self
 
-    def sample(self, rng: np.random.Generator, n: int
+    def sample(self, rng: np.random.Generator, n: int,
+               batch: Optional[int] = None, engine: str = "jax"
                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Draw ``n`` rows in padded fixed-size jit batches: generator MLP,
+        activation and Gumbel-max decode fuse into one compiled call per
+        batch, traced once per batch size.  ``engine="numpy"`` is the host
+        fallback (single unbatched MLP call + vectorized numpy decode)."""
         assert self.params is not None, "fit first"
-        key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
-        kz, kg = jax.random.split(key)
-        z = jax.random.normal(kz, (n, self.cfg.d_z))
-        raw = self._activate(_mlp(self.params["g"], z, kg, 0.0, False))
-        return self.codec.decode(np.asarray(raw), rng)
+        if n == 0:
+            return (np.zeros((0, self.schema.n_cont), np.float32),
+                    np.zeros((0, self.schema.n_cat), np.int32))
+        # 63 bits of seed entropy: per-shard streams must not birthday-
+        # collide across million-shard jobs
+        key = jax.random.PRNGKey(int(rng.integers(2 ** 63)))
+        if engine == "numpy":
+            kz, kg = jax.random.split(key)
+            z = jax.random.normal(kz, (n, self.cfg.d_z))
+            raw = self._activate(_mlp(self.params["g"], z, kg, 0.0, False))
+            return self.codec.decode(np.asarray(raw), rng)
+        # an explicit batch is honored exactly even when n < batch (draw
+        # one padded block and trim) so a ragged tail shard reuses the
+        # full-shard trace instead of evicting it; only the implicit
+        # default clamps to n to keep small in-memory draws cheap
+        b = (max(1, int(batch)) if batch
+             else max(1, min(int(self.cfg.sample_batch), n)))
+        if b not in self._sample_cache:
+            decoder = self.codec.batched(b)
+
+            @jax.jit
+            def _draw(params, key):
+                kz, kg, kd = jax.random.split(key, 3)
+                z = jax.random.normal(kz, (b, self.cfg.d_z))
+                raw = self._activate(_mlp(params, z, kg, 0.0, False))
+                return decoder.decode_traceable(raw, kd)
+
+            self._sample_cache[b] = _draw
+        _draw = self._sample_cache[b]
+        conts, cats = [], []
+        for i in range(-(-n // b)):
+            c, k = _draw(self.params["g"], jax.random.fold_in(key, i))
+            conts.append(np.asarray(c))
+            cats.append(np.asarray(k))
+        return np.concatenate(conts)[:n], np.concatenate(cats)[:n]
 
 
 # ---------------------------------------------------------------------------

@@ -12,11 +12,47 @@ Squared loss; leaf values use XGBoost's L1(alpha)/L2(lambda) shrinkage:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: CPU hosts split the packed forest across this many host threads (XLA's
+#: CPU gather barely multithreads: the tree descent is gather-latency
+#: bound, and concurrent half-forest scans overlap almost perfectly).
+#: The count is FIXED — not ``cpu_count`` — so the partial-sum order, and
+#: therefore the float32 output, is host-independent (datastream resumes
+#: promise byte-identical shards across machines).
+_CPU_FOREST_SHARDS = 4
+#: engage threading only when rows × trees is big enough to amortize the
+#: extra dispatches
+_SHARD_MIN_WORK = 1 << 20
+
+_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_LOCK = threading.Lock()
+
+
+def _pool() -> ThreadPoolExecutor:
+    global _POOL
+    if _POOL is None:
+        with _POOL_LOCK:
+            if _POOL is None:
+                _POOL = ThreadPoolExecutor(
+                    max_workers=min(_CPU_FOREST_SHARDS, os.cpu_count() or 1))
+    return _POOL
+
+
+def _forest_shards(n_rows: int, n_trees: int) -> int:
+    if jax.default_backend() != "cpu":
+        return 1          # accelerators want one fused call
+    if n_rows * n_trees < _SHARD_MIN_WORK or n_trees < _CPU_FOREST_SHARDS:
+        return 1
+    return _CPU_FOREST_SHARDS
 
 
 @dataclasses.dataclass
@@ -107,9 +143,63 @@ def _gain(G, H, cfg):
     return 0.5 * g1 * g1 / (H + cfg.lam)
 
 
+def _forest_predict_core(feature, threshold, leaf, is_leaf, X, base, lr,
+                         depth):
+    """Scan the packed (T, S) forest arrays over all trees: one descent
+    (``fori_loop`` over depth) per tree, vectorized across rows."""
+
+    def one_tree(carry, t):
+        feat, thr, lf, isl = t
+        idx = jnp.zeros(X.shape[0], jnp.int32)
+        val = jnp.zeros(X.shape[0], jnp.float32)
+        done = jnp.zeros(X.shape[0], bool)
+
+        def step(_, state):
+            idx, val, done = state
+            f = feat[idx]
+            leaf_here = isl[idx]
+            newly = leaf_here & ~done
+            val = jnp.where(newly, lf[idx], val)
+            done = done | leaf_here
+            go_right = jnp.take_along_axis(
+                X, f[:, None], axis=1)[:, 0] > thr[idx]
+            idx = jnp.where(done, idx,
+                            jnp.where(go_right, 2 * idx + 2, 2 * idx + 1))
+            return idx, val, done
+
+        idx, val, done = jax.lax.fori_loop(0, depth + 1, step,
+                                           (idx, val, done))
+        return carry + lr * val, None
+
+    total, _ = jax.lax.scan(
+        one_tree, jnp.full(X.shape[0], base, jnp.float32),
+        (feature, threshold, leaf, is_leaf))
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_predict(feature, threshold, leaf, is_leaf, X, base, lr, depth):
+    """Single-output packed forest: (T, S) arrays, X (n, f) → (n,)."""
+    return _forest_predict_core(feature, threshold, leaf, is_leaf, X,
+                                base, lr, depth)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_predict_multi(feature, threshold, leaf, is_leaf, X, base, lr,
+                          depth):
+    """Multi-output packed forest: (C, T, S) arrays + (C,) base → (n, C)
+    scores in ONE jit call (``vmap`` over the class axis), instead of C
+    sequential per-class predictions."""
+    scores = jax.vmap(
+        lambda f, t, l, i, b: _forest_predict_core(f, t, l, i, X, b, lr,
+                                                   depth)
+    )(feature, threshold, leaf, is_leaf, base)
+    return scores.T
+
+
 class GBDTRegressor:
-    def __init__(self, cfg: GBDTConfig = GBDTConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[GBDTConfig] = None):
+        self.cfg = cfg if cfg is not None else GBDTConfig()
         self.base = 0.0
         self.trees: List[_Tree] = []
         self._packed = None
@@ -140,37 +230,30 @@ class GBDTRegressor:
         }
 
     def predict(self, X) -> jnp.ndarray:
-        """Vectorized JAX prediction (jit-able, shard-friendly)."""
+        """Vectorized JAX prediction through the packed forest (jit
+        compiled once per row-count; use ``feature_engine.batched_rows``
+        for fixed-shape streaming).  On CPU the forest is split across
+        host threads (see ``_forest_shards``)."""
         pk = self._packed
         X = jnp.asarray(X, jnp.float32)
         T = pk["feature"].shape[0]
-
-        def one_tree(carry, t):
-            feat, thr, leaf, isl = t
-            idx = jnp.zeros(X.shape[0], jnp.int32)
-            val = jnp.zeros(X.shape[0], jnp.float32)
-            done = jnp.zeros(X.shape[0], bool)
-
-            def step(_, state):
-                idx, val, done = state
-                f = feat[idx]
-                leaf_here = isl[idx]
-                newly = leaf_here & ~done
-                val = jnp.where(newly, leaf[idx], val)
-                done = done | leaf_here
-                go_right = jnp.take_along_axis(
-                    X, f[:, None], axis=1)[:, 0] > thr[idx]
-                idx = jnp.where(done, idx,
-                                jnp.where(go_right, 2 * idx + 2, 2 * idx + 1))
-                return idx, val, done
-
-            idx, val, done = jax.lax.fori_loop(
-                0, self.cfg.max_depth + 1, step, (idx, val, done))
-            return carry + self.cfg.lr * val, None
-
-        total, _ = jax.lax.scan(
-            one_tree, jnp.full(X.shape[0], self.base, jnp.float32),
-            (pk["feature"], pk["threshold"], pk["leaf"], pk["is_leaf"]))
+        shards = _forest_shards(X.shape[0], T)
+        lr = jnp.float32(self.cfg.lr)
+        if shards <= 1:
+            return _forest_predict(pk["feature"], pk["threshold"],
+                                   pk["leaf"], pk["is_leaf"], X,
+                                   jnp.float32(self.base), lr,
+                                   self.cfg.max_depth)
+        zero = jnp.float32(0.0)
+        bounds = [T * i // shards for i in range(shards + 1)]
+        futs = [_pool().submit(
+            _forest_predict, pk["feature"][i0:i1], pk["threshold"][i0:i1],
+            pk["leaf"][i0:i1], pk["is_leaf"][i0:i1], X, zero, lr,
+            self.cfg.max_depth)
+            for i0, i1 in zip(bounds, bounds[1:])]
+        total = jnp.float32(self.base)
+        for f in futs:          # fixed order: host-independent float sum
+            total = total + f.result()
         return total
 
     def predict_np(self, X) -> np.ndarray:
@@ -194,18 +277,65 @@ def _predict_tree_np(tree: _Tree, X: np.ndarray) -> np.ndarray:
 
 
 class GBDTClassifier:
-    """One-vs-rest stack of regressors on one-hot targets; softmax combine."""
+    """One-vs-rest stack of regressors on one-hot targets; softmax combine.
 
-    def __init__(self, n_classes: int, cfg: GBDTConfig = GBDTConfig()):
+    After ``fit`` the per-class forests are stacked into (C, T, S) arrays
+    so ``predict``/``predict_proba`` score every class in one jit call
+    (``_forest_predict_multi``) instead of C sequential tree loops."""
+
+    def __init__(self, n_classes: int, cfg: Optional[GBDTConfig] = None):
+        self.cfg = cfg if cfg is not None else GBDTConfig()
         self.n_classes = n_classes
-        self.models = [GBDTRegressor(cfg) for _ in range(n_classes)]
+        self.models = [GBDTRegressor(self.cfg) for _ in range(n_classes)]
+        self._packed = None
 
     def fit(self, X, y):
         onehot = np.eye(self.n_classes, dtype=np.float32)[np.asarray(y, np.int64)]
         for k, m in enumerate(self.models):
             m.fit(X, onehot[:, k])
+        self._pack()
         return self
 
+    def _pack(self):
+        self._packed = {
+            k: jnp.stack([m._packed[k] for m in self.models])
+            for k in ("feature", "threshold", "leaf", "is_leaf")}
+        self._base = jnp.asarray([m.base for m in self.models], jnp.float32)
+
+    def predict_scores(self, X) -> jnp.ndarray:
+        """(n, C) raw one-vs-rest scores, all classes in one scan (CPU:
+        tree axis split across host threads, as in the regressor)."""
+        pk = self._packed
+        X = jnp.asarray(X, jnp.float32)
+        T = pk["feature"].shape[1]
+        # the shards slice the per-class tree axis (T), so the
+        # too-few-trees guard must see T; the work estimate still counts
+        # every class's descent
+        shards = _forest_shards(X.shape[0] * self.n_classes, T)
+        lr = jnp.float32(self.cfg.lr)
+        if shards <= 1:
+            return _forest_predict_multi(pk["feature"], pk["threshold"],
+                                         pk["leaf"], pk["is_leaf"], X,
+                                         self._base, lr, self.cfg.max_depth)
+        zeros = jnp.zeros_like(self._base)
+        bounds = [T * i // shards for i in range(shards + 1)]
+        futs = [_pool().submit(
+            _forest_predict_multi, pk["feature"][:, i0:i1],
+            pk["threshold"][:, i0:i1], pk["leaf"][:, i0:i1],
+            pk["is_leaf"][:, i0:i1], X, zeros, lr, self.cfg.max_depth)
+            for i0, i1 in zip(bounds, bounds[1:])]
+        total = self._base[None, :]
+        for f in futs:          # fixed order: host-independent float sum
+            total = total + f.result()
+        return total
+
+    def predict_proba(self, X) -> jnp.ndarray:
+        return jax.nn.softmax(self.predict_scores(X), axis=1)
+
+    def predict(self, X) -> jnp.ndarray:
+        return jnp.argmax(self.predict_scores(X), axis=1).astype(jnp.int32)
+
+    # -- numpy reference (per-class Python tree loops) ----------------------
     def predict_proba_np(self, X) -> np.ndarray:
         scores = np.stack([m.predict_np(X) for m in self.models], 1)
         e = np.exp(scores - scores.max(1, keepdims=True))

@@ -29,6 +29,7 @@ from repro.core.features import FEATURE_GENERATORS, GANConfig
 from repro.core.structure import KroneckerFit, fit_structure
 from repro.graph.ops import Graph
 from repro.tabular.schema import TableSchema, infer_schema
+from repro.utils import call_with_optional_kwargs
 
 
 @dataclasses.dataclass
@@ -90,11 +91,13 @@ class SyntheticGraphPipeline:
     def generate(self, seed: int = 0, scale_nodes: int = 1,
                  density_preserving: bool = True, chunked: bool = False,
                  k_pref: int = 2, backend: Optional[str] = None,
-                 id_dtype=None
+                 id_dtype=None, feature_batch: Optional[int] = None
                  ) -> Tuple[Graph, np.ndarray, np.ndarray]:
         """``backend`` picks the ``repro.core.sampler`` engine backend for
         kronecker structure generation (None/'auto' = device default);
-        ``id_dtype`` widens node ids (auto int32/int64 by fit size)."""
+        ``id_dtype`` widens node ids (auto int32/int64 by fit size);
+        ``feature_batch`` fixes the padded jit batch of the feature/align
+        engine (None = the generators' own defaults)."""
         rng = np.random.default_rng(seed)
         key = jax.random.PRNGKey(seed)
         t0 = time.time()
@@ -123,11 +126,13 @@ class SyntheticGraphPipeline:
 
         t0 = time.time()
         n_rows = g.n_edges if self.feature_kind == "edge" else g.n_nodes
-        cont_s, cat_s = self.features.sample(rng, n_rows)
+        cont_s, cat_s = call_with_optional_kwargs(
+            self.features.sample, rng, n_rows, batch=feature_batch)
         self.timings.gen_feat_s = time.time() - t0
 
         t0 = time.time()
-        cont_s, cat_s = self.aligner.align(g, cont_s, cat_s, rng)
+        cont_s, cat_s = call_with_optional_kwargs(
+            self.aligner.align, g, cont_s, cat_s, rng, batch=feature_batch)
         self.timings.gen_align_s = time.time() - t0
         return g, cont_s, cat_s
 
@@ -151,7 +156,10 @@ class SyntheticGraphPipeline:
 
         Features/alignment ride along per shard when the pipeline is
         fitted with edge features; node-feature pipelines stream structure
-        only (cross-shard node identity is not streamed).
+        only (cross-shard node identity is not streamed).  Timings are
+        split per stage: ``gen_struct_s`` covers edge sampling only, and
+        the per-shard feature draw / alignment land in ``gen_feat_s`` /
+        ``gen_align_s`` (they used to be lumped into ``gen_struct_s``).
         """
         from repro.datastream import DatasetJob, FeatureSpec
 
@@ -165,11 +173,12 @@ class SyntheticGraphPipeline:
                 and self.feature_kind == "edge":
             features = FeatureSpec(self.features,
                                    getattr(self, "aligner", None))
-        t0 = time.time()
         job = DatasetJob(fit, out_dir, shard_edges=shard_edges, seed=seed,
                          k_pref=k_pref, double_buffered=double_buffered,
                          mode=mode, features=features, backend=backend,
                          id_dtype=id_dtype)
         job.run(resume=resume)
-        self.timings.gen_struct_s = time.time() - t0
+        self.timings.gen_struct_s = job.timings["gen_struct_s"]
+        self.timings.gen_feat_s = job.timings["gen_feat_s"]
+        self.timings.gen_align_s = job.timings["gen_align_s"]
         return job.dataset()

@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -42,6 +43,7 @@ from repro.datastream.scheduler import ChunkScheduler
 from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter,
                                      pump_chunks)
 from repro.graph.ops import Graph
+from repro.utils import accepts_kwarg, call_with_optional_kwargs
 
 _FEATURE_SALT = 0xFEA7
 
@@ -57,9 +59,19 @@ _DEVICE_STREAM = "device_descend_v2"
 class FeatureSpec:
     """Per-shard feature generation: a *fitted* generator (+ optional
     fitted aligner).  Only edge features stream (node features would need
-    cross-shard node identity; see reader.batches for training access)."""
+    cross-shard node identity; see reader.batches for training access).
+
+    ``batch`` fixes the padded jit batch size of the batched feature
+    engine (GAN sample + decode, packed GBDT inference) — ``None`` lets
+    the caller (``DatasetJob``) derive it from ``shard_edges`` so every
+    shard reuses one compiled shape.  ``feat_s``/``align_s`` accumulate
+    wall-time so the pipeline can report feature/align cost separately
+    from structure generation."""
     generator: Any                      # .sample(rng, n) -> (cont, cat)
     aligner: Any = None                 # .align(g, cont, cat, rng)
+    batch: Optional[int] = None
+    feat_s: float = 0.0
+    align_s: float = 0.0
 
     def describe(self) -> dict:
         schema = getattr(self.generator, "schema", None)
@@ -69,7 +81,8 @@ class FeatureSpec:
                 "cat_cards": [int(c) for c in schema.cat_cards]}
 
     def sample_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
-                         dst: np.ndarray, bipartite: bool):
+                         dst: np.ndarray, bipartite: bool,
+                         batch: Optional[int] = None):
         """Deterministic per-shard draw + shard-local alignment.
 
         Alignment uses structural features of the id-compacted shard
@@ -77,10 +90,18 @@ class FeatureSpec:
         approximation of the global §3.4 alignment.
         """
         rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
-        cont, cat = self.generator.sample(rng, len(src))
+        b = batch or self.batch
+        t0 = time.perf_counter()
+        cont, cat = call_with_optional_kwargs(self.generator.sample, rng,
+                                              len(src), batch=b)
+        self.feat_s += time.perf_counter() - t0
         if self.aligner is not None and len(src):
+            # id compaction is part of the alignment cost
+            t0 = time.perf_counter()
             g_local = _compact_subgraph(src, dst, bipartite)
-            cont, cat = self.aligner.align(g_local, cont, cat, rng)
+            cont, cat = call_with_optional_kwargs(
+                self.aligner.align, g_local, cont, cat, rng, batch=b)
+            self.align_s += time.perf_counter() - t0
         return cont, cat
 
 
@@ -130,6 +151,9 @@ class DatasetJob:
         self.mode = mode
         self.features = features
         self.dtype = _edge_dtype(fit, id_dtype)
+        # per-stage wall time of the last run() call (README "timings")
+        self.timings: Dict[str, float] = {
+            "gen_struct_s": 0.0, "gen_feat_s": 0.0, "gen_align_s": 0.0}
         # resolve the engine backend by name at plan time: the chosen
         # name is recorded in the manifest (streams differ per backend,
         # so a resume on a different host must not silently switch).
@@ -164,6 +188,46 @@ class DatasetJob:
             num_workers=self.num_workers, seed=self.seed)
         self.k_pref = self.scheduler.k_pref
 
+    def _feature_batch(self) -> Optional[int]:
+        if self.features is None:
+            return None
+        return int(self.features.batch or self.shard_edges)
+
+    def _features_meta(self) -> Optional[dict]:
+        """Manifest record for the feature config.  When the generator or
+        aligner runs through the batched jax engine, the resolved jit
+        batch AND the device class are included: the per-block PRNG
+        stream depends on the batch, and the engine's float sums (CPU
+        host-thread forest sharding vs one fused accelerator call, plus
+        device numerics) depend on the device class — a resume under
+        either change would silently alter the feature bytes, so both are
+        recorded and validated like backend/dtype.
+
+        Detection: an ``engine_batched`` class attribute when present
+        (``GANFeatureGenerator``/``GBDTAligner`` set True, numpy-only
+        ``RandomAligner`` sets False despite its compat ``batch=``
+        kwarg); otherwise accepting ``batch=`` is taken as engine use, so
+        unknown third-party batched components get the conservative pin.
+        Pure-numpy specs (KDE/Random + RandomAligner) depend on neither
+        and stay resumable across hosts."""
+        if self.features is None:
+            return None
+
+        def engine_batched(obj, method):
+            if obj is None:
+                return False
+            flag = getattr(obj, "engine_batched", None)
+            if flag is not None:
+                return bool(flag)
+            return accepts_kwarg(getattr(obj, method), "batch")
+
+        meta = self.features.describe()
+        if engine_batched(self.features.generator, "sample") \
+                or engine_batched(self.features.aligner, "align"):
+            meta.update(batch=self._feature_batch(),
+                        device=jax.default_backend())
+        return meta
+
     # -- plan --------------------------------------------------------------
     def plan(self, overwrite: bool = False) -> Manifest:
         """Build (and persist) the manifest with every shard pending."""
@@ -190,7 +254,7 @@ class DatasetJob:
             backend=self.backend,
             n_dev=(len(jax.devices()) if self.mode == "device_steps"
                    else None),
-            features=self.features.describe() if self.features else None,
+            features=self._features_meta(),
             shards=shards)
         os.makedirs(self.out_dir, exist_ok=True)
         manifest.save(self.out_dir)
@@ -228,6 +292,10 @@ class DatasetJob:
                      for s in self.scheduler.shards} \
             if self.mode == "chunks" else {}
         n_done = 0
+        t_struct = 0.0
+        feat0 = (self.features.feat_s, self.features.align_s) \
+            if self.features is not None else (0.0, 0.0)
+        feat_batch = self._feature_batch()
         for rec in manifest.shards:
             if rec.status == "done":
                 continue
@@ -235,18 +303,26 @@ class DatasetJob:
                 continue
             if max_shards is not None and n_done >= max_shards:
                 break
+            t0 = time.perf_counter()
             arrays = (self._generate_shard_chunks(rec)
                       if self.mode == "chunks"
                       else self._generate_shard_device_step(rec))
+            t_struct += time.perf_counter() - t0
             if self.features is not None:
                 cont, cat = self.features.sample_for_shard(
                     self.seed, rec.shard_id, arrays["src"], arrays["dst"],
-                    self.fit.bipartite)
+                    self.fit.bipartite, batch=feat_batch)
                 arrays["cont"] = np.asarray(cont, np.float32)
                 arrays["cat"] = np.asarray(cat, np.int32)
             writer.write_shard(rec.shard_id, arrays)
             n_done += 1
         writer.checkpoint()
+        self.timings = {
+            "gen_struct_s": t_struct,
+            "gen_feat_s": (self.features.feat_s - feat0[0]
+                           if self.features is not None else 0.0),
+            "gen_align_s": (self.features.align_s - feat0[1]
+                            if self.features is not None else 0.0)}
         return manifest
 
     def resume(self, max_shards: Optional[int] = None,
@@ -374,8 +450,8 @@ class DatasetJob:
                 "n_dev": (len(jax.devices())
                           if self.mode == "device_steps" else None),
                 # a resumed job must produce the same columns per shard
-                "features": (self.features.describe()
-                             if self.features else None)}
+                # (and, for batched generators, the same feature stream)
+                "features": self._features_meta()}
         have = {k: getattr(manifest, k) for k in want}
         if have != want:
             diffs = {k: (have[k], want[k]) for k in want

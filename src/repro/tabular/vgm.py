@@ -58,6 +58,20 @@ def fit_vgm(x: np.ndarray, n_modes: int = 5, n_iter: int = 50,
     return VGMParams(weights=weights, means=means, stds=stds, active=active)
 
 
+def stack_params(vgms, n_cont: int, n_modes: int
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-column VGM parameters into dense (n_cont, K) arrays for
+    the batched decode engine (``repro.core.feature_engine``)."""
+    means = np.zeros((n_cont, n_modes), np.float32)
+    stds = np.ones((n_cont, n_modes), np.float32)
+    active = np.zeros((n_cont, n_modes), bool)
+    for j, p in enumerate(vgms):
+        means[j] = p.means
+        stds[j] = p.stds
+        active[j] = p.active
+    return means, stds, active
+
+
 def transform(params: VGMParams, x: np.ndarray
               ) -> Tuple[np.ndarray, np.ndarray]:
     """x -> (mode ids (N,), normalized scalar (N,) clipped to ±4)."""

@@ -1,8 +1,34 @@
 """Small shared utilities."""
 from __future__ import annotations
 
+import inspect
+
 import jax
 import jax.numpy as jnp
+
+
+def accepts_kwarg(fn, name: str) -> bool:
+    """True when ``fn`` can be called with keyword ``name`` — used to
+    thread optional engine kwargs (e.g. ``batch=``) through pluggable
+    generator/aligner interfaces without breaking third-party ones.
+    A ``**kwargs`` catch-all counts as accepting every name."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    if name in params:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values())
+
+
+def call_with_optional_kwargs(fn, *args, **optional):
+    """``fn(*args)`` plus whichever of ``optional`` are non-None AND in
+    ``fn``'s signature — the dispatch rule for optional engine kwargs
+    across pluggable interfaces."""
+    kwargs = {k: v for k, v in optional.items()
+              if v is not None and accepts_kwarg(fn, k)}
+    return fn(*args, **kwargs)
 
 
 def shard_map_compat(fn, mesh, in_specs, out_specs, check_vma=False):

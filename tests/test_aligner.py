@@ -94,6 +94,106 @@ def test_aligner_align_preserves_rows():
     assert sorted(a_k[:, 0].tolist()) == sorted(cat[: len(a_k), 0].tolist())
 
 
+def test_config_defaults_not_shared():
+    """Regression: ``cfg=GBDTConfig()`` / ``cfg=AlignerConfig()`` defaults
+    used to be evaluated once at def time and aliased across instances."""
+    from repro.tabular.schema import TableSchema
+    r1, r2 = GBDTRegressor(), GBDTRegressor()
+    assert r1.cfg is not r2.cfg
+    r1.cfg.n_rounds = 1
+    assert r2.cfg.n_rounds != 1
+    c1, c2 = GBDTClassifier(2), GBDTClassifier(2)
+    assert c1.cfg is not c2.cfg
+    s = TableSchema(n_cont=1, cat_cards=())
+    a1, a2 = GBDTAligner(s), GBDTAligner(s)
+    assert a1.cfg is not a2.cfg and a1.cfg.gbdt is not a2.cfg.gbdt
+    a1.cfg.max_cat_classes = 3
+    assert a2.cfg.max_cat_classes != 3
+
+
+def test_classifier_packed_predict_matches_np(rng):
+    """The multi-output packed scan scores all classes in one call and
+    matches the per-class numpy reference exactly (argmax) / closely
+    (probabilities)."""
+    X = rng.normal(0, 1, (600, 3)).astype(np.float32)
+    y = ((X[:, 0] + X[:, 1] > 0).astype(np.int32)
+         + (X[:, 2] > 0.5).astype(np.int32))
+    m = GBDTClassifier(3, GBDTConfig(n_rounds=15, max_depth=4)).fit(X, y)
+    np.testing.assert_array_equal(np.asarray(m.predict(X)), m.predict_np(X))
+    np.testing.assert_allclose(np.asarray(m.predict_proba(X)),
+                               m.predict_proba_np(X), rtol=1e-4, atol=1e-5)
+
+
+def test_batched_predict_matches_unbatched(rng):
+    from repro.core.feature_engine import batched_rows
+    X = rng.normal(0, 1, (1000, 4)).astype(np.float32)
+    y = X[:, 0] - 2 * X[:, 3]
+    m = GBDTRegressor(GBDTConfig(n_rounds=12, max_depth=3)).fit(X, y)
+    np.testing.assert_allclose(batched_rows(m.predict, X, 256),
+                               m.predict_np(X), rtol=1e-4, atol=1e-4)
+    # ragged tail + batch larger than the input
+    np.testing.assert_allclose(batched_rows(m.predict, X[:700], 512),
+                               m.predict_np(X[:700]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(batched_rows(m.predict, X[:10], 512),
+                               m.predict_np(X[:10]), rtol=1e-4, atol=1e-4)
+
+
+def test_aligner_fit_tiny_n_has_finite_quality():
+    """Regression: an empty 20% holdout (n_tr == n) used to poison
+    ``col_quality`` with NaN, which sorts first under argsort[::-1] and
+    hijacked the primary-column choice."""
+    rng = np.random.default_rng(0)
+    for n_edges in (1, 2, 4):
+        src = rng.integers(0, 3, n_edges).astype(np.int32)
+        dst = rng.integers(0, 3, n_edges).astype(np.int32)
+        g = Graph(src, dst, 3, 3)
+        cont = rng.normal(size=(n_edges, 2)).astype(np.float32)
+        cat = rng.integers(0, 2, (n_edges, 1)).astype(np.int32)
+        al = GBDTAligner(infer_schema(cont, cat),
+                         AlignerConfig(gbdt=GBDTConfig(n_rounds=2))
+                         ).fit(g, cont, cat)
+        assert np.isfinite(al.col_quality).all(), n_edges
+        a_c, a_k = al.align(g, cont, cat)
+        assert len(a_c) == n_edges and np.isfinite(a_c).all()
+
+
+def test_random_aligner_truncates_to_graph():
+    """Regression: RandomAligner returned every generated row even when
+    the graph had fewer edges, desynchronizing the ablation path from
+    GBDTAligner.align's ``min(len(rows), n_edges)`` contract."""
+    rng = np.random.default_rng(0)
+    g, cont, cat = _planted()
+    extra_c = np.concatenate([cont, cont[:100]])
+    extra_k = np.concatenate([cat, cat[:100]])
+    schema = infer_schema(cont, cat)
+    r_c, r_k = RandomAligner(schema).align(g, extra_c, extra_k, rng)
+    assert len(r_c) == len(r_k) == g.n_edges
+    al = GBDTAligner(schema, AlignerConfig(gbdt=GBDTConfig(n_rounds=2))
+                     ).fit(g, cont, cat)
+    a_c, _ = al.align(g, extra_c, extra_k, np.random.default_rng(1))
+    assert len(a_c) == len(r_c)
+    # fewer rows than edges: both sides truncate to the row count
+    r_c, _ = RandomAligner(schema).align(g, cont[:50], cat[:50], rng)
+    assert len(r_c) == 50
+
+
+def test_align_batched_matches_unbatched():
+    g, cont, cat = _planted()
+    schema = infer_schema(cont, cat)
+    al = GBDTAligner(schema, AlignerConfig(gbdt=FAST), kind="edge").fit(
+        g, cont, cat)
+    p1 = al.predict(g)
+    p2 = al.predict(g, batch=1024)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-5)
+    # batched align is still a permutation of the same rows and keeps the
+    # planted coupling
+    a_c, a_k = al.align(g, cont, cat, np.random.default_rng(3), batch=1024)
+    np.testing.assert_allclose(np.sort(a_c[:, 0]), np.sort(cont[:, 0]))
+    deg_edge = np.asarray(out_degrees(g))[np.asarray(g.src)]
+    corr = np.corrcoef(a_c[:, 0], np.log1p(deg_edge[: len(a_c)]))[0, 1]
+    assert corr > 0.8, corr
+
+
 def test_node_aligner_runs():
     from repro.data.reference import cora_like
     g, cont, cat = cora_like(n=256, n_edges=1024)

@@ -91,6 +91,7 @@ def test_noise_differs_across_keys_but_is_key_deterministic():
 
 # -- streamed == in-memory ---------------------------------------------------
 
+@pytest.mark.slow
 def test_streamed_equals_oneshot_distribution(tmp_path):
     out = str(tmp_path / "ds")
     job = DatasetJob(FIT, out, shard_edges=8192, seed=0)
@@ -170,6 +171,23 @@ def test_resume_refuses_mismatched_config(tmp_path, rng):
     with pytest.raises(ValueError, match="features"):
         DatasetJob(FIT, out, shard_edges=8192, seed=0,
                    features=spec).resume()
+    # a different feature jit batch is a different feature stream for
+    # engine-batched generators — the recorded batch must refuse to
+    # resume too (numpy-only specs like KDE skip the pin entirely)
+    from repro.core.features import GANFeatureGenerator
+    r = np.random.default_rng(0)
+    cont = r.normal(size=(200, 1)).astype(np.float32)
+    cat = r.integers(0, 2, size=(200, 1)).astype(np.int32)
+    from repro.tabular.schema import infer_schema
+    gan = GANFeatureGenerator(infer_schema(cont, cat)).fit(cont, cat,
+                                                           steps=3)
+    out_f = out + "_feat"
+    DatasetJob(FIT, out_f, shard_edges=8192, seed=0,
+               features=FeatureSpec(gan)).run(max_shards=1)
+    assert Manifest.load(out_f).features["batch"] == 8192
+    with pytest.raises(ValueError, match="features"):
+        DatasetJob(FIT, out_f, shard_edges=8192, seed=0,
+                   features=FeatureSpec(gan, batch=4096)).resume()
     # device_steps resumption depends on the mesh size
     m = Manifest.load(out)
     m.mode, m.n_dev = "device_steps", 4
@@ -293,6 +311,8 @@ def test_feature_streaming_bounded_per_shard(tmp_path, rng):
     job.run()
     ds = ShardedGraphDataset(out)
     assert ds.has_features
+    # pure-numpy spec (KDE + RandomAligner): no engine batch/device pin,
+    # so these datasets stay resumable across hosts
     assert ds.manifest.features == {"n_cont": 2, "cat_cards": [3]}
     total = 0
     for blk in ds:
@@ -326,6 +346,18 @@ def test_pipeline_generate_streamed(tmp_path, rng):
     assert ds.total_edges == pipe.struct.E
     assert ds.has_features
     assert ds.verify(deep=True) == []
+    # per-stage timing split: feature/align wall-time is no longer lumped
+    # into gen_struct_s
+    t = pipe.timings
+    assert t.gen_struct_s > 0 and t.gen_feat_s > 0 and t.gen_align_s > 0
+    # structure-only stream leaves the feature/align stages at zero
+    pipe2 = SyntheticGraphPipeline(features="kde", aligner="random")
+    pipe2.fit(g, cont, cat)
+    pipe2.generate_streamed(str(tmp_path / "ds2"), seed=0, shard_edges=2048,
+                            include_features=False)
+    assert pipe2.timings.gen_struct_s > 0
+    assert pipe2.timings.gen_feat_s == 0.0
+    assert pipe2.timings.gen_align_s == 0.0
 
 
 # -- pump --------------------------------------------------------------------

@@ -23,6 +23,7 @@ def _run(body: str, devices: int = 8, timeout: int = 900):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_probe_extrapolation_matches_unrolled_truth():
     """probe(L=1,2)-extrapolated flops == fully-unrolled L=6 flops (±3%)."""
     _run("""
@@ -50,6 +51,7 @@ def test_probe_extrapolation_matches_unrolled_truth():
     """)
 
 
+@pytest.mark.slow
 def test_chunk_extrapolated_probe_matches_direct():
     """The nc∈{2,4,8} quadratic fit reproduces a directly-probed nc=16 cell."""
     _run("""

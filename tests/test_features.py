@@ -83,6 +83,94 @@ def test_kde_and_random_generators(rng):
     assert abs(cs[:, 0].mean() - cont[:, 0].mean()) < 0.5
 
 
+def test_gan_config_default_not_shared():
+    """Regression: the ``cfg=GANConfig()`` default used to be evaluated
+    once at def time and aliased across every instance."""
+    s = TableSchema(n_cont=1, cat_cards=(2,))
+    a, b = GANFeatureGenerator(s), GANFeatureGenerator(s)
+    assert a.cfg is not b.cfg
+    a.cfg.batch = 9999
+    assert b.cfg.batch != 9999
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_decoded_cat_ids_always_in_range(seed):
+    """Adversarial probability rows (deltas, near-zero mass, rounding
+    residue) must never decode to an out-of-range category id — the old
+    ``(u > cdf).sum()`` could return ``card`` when ``cdf[-1] < 1``."""
+    r = np.random.default_rng(seed)
+    card = int(r.integers(2, 7))
+    schema = TableSchema(n_cont=0, cat_cards=(card,))
+    codec = TableCodec(schema, n_modes=3).fit(
+        np.zeros((8, 0), np.float32), r.integers(0, card, (8, 1)))
+    n = 64
+    probs = np.zeros((n, card), np.float32)
+    probs[: n // 4] = r.random((n // 4, card))              # generic
+    probs[n // 4: n // 2, 0] = 1.0 - 1e-7                   # near-delta
+    probs[n // 2: 3 * n // 4] = 1e-9                        # tiny mass
+    # rows whose float32 cumsum lands strictly below 1
+    probs[3 * n // 4:] = np.float32(1.0 / card) - np.float32(3e-8)
+    for decode in (codec.decode, codec.decode_reference):
+        _, cat = decode(probs.copy(), np.random.default_rng(seed))
+        assert cat.min() >= 0 and cat.max() < card, decode
+    _, cat = codec.batched(batch=32).decode(probs.copy(),
+                                            np.random.default_rng(seed))
+    assert cat.min() >= 0 and cat.max() < card
+
+
+def test_decode_numpy_vs_engine_equivalence(rng):
+    """Host decode, per-row reference decode and the jit engine agree in
+    distribution (moments + categorical marginals) on the same raw."""
+    cont, cat = _mixture_data(rng, 4000)
+    schema = infer_schema(cont, cat)
+    codec = TableCodec(schema, n_modes=3).fit(cont, cat)
+    # softmax-ish random raw so mode/cat sampling is non-degenerate
+    r = np.random.default_rng(1)
+    raw = np.abs(r.normal(size=(4000, codec.enc_dim))).astype(np.float32)
+    outs = {
+        "np": codec.decode(raw, np.random.default_rng(2)),
+        "ref": codec.decode_reference(raw, np.random.default_rng(2)),
+        "jax": codec.batched(batch=1024).decode(raw,
+                                                np.random.default_rng(2)),
+    }
+    c0, k0 = outs["np"]
+    for name, (c, k) in outs.items():
+        assert c.shape == c0.shape and k.shape == k0.shape
+        np.testing.assert_allclose(c.mean(0), c0.mean(0), atol=0.25,
+                                   err_msg=name)
+        np.testing.assert_allclose(c.std(0), c0.std(0), atol=0.3,
+                                   err_msg=name)
+        for j, card in enumerate(schema.cat_cards):
+            f = np.bincount(k[:, j], minlength=card) / len(k)
+            f0 = np.bincount(k0[:, j], minlength=card) / len(k0)
+            assert np.abs(f - f0).max() < 0.05, (name, j)
+
+
+def test_gan_batched_sample_matches_unbatched_moments(rng):
+    cont, cat = _mixture_data(rng, 1200)
+    schema = infer_schema(cont, cat)
+    gen = GANFeatureGenerator(schema, GANConfig(batch=128)).fit(
+        cont, cat, steps=120, seed=0)
+    n = 3000
+    cb, kb = gen.sample(np.random.default_rng(5), n, batch=1024)
+    cu, ku = gen.sample(np.random.default_rng(5), n, engine="numpy")
+    assert cb.shape == cu.shape == (n, 2)
+    assert kb.shape == ku.shape == (n, 2)
+    np.testing.assert_allclose(cb.mean(0), cu.mean(0), atol=0.3)
+    for j, card in enumerate(schema.cat_cards):
+        fb = np.bincount(kb[:, j], minlength=card) / n
+        fu = np.bincount(ku[:, j], minlength=card) / n
+        assert np.abs(fb - fu).max() < 0.06, j
+    # ragged tails and batch > n both pad cleanly
+    for odd_n, b in ((777, 256), (100, 4096)):
+        c, k = gen.sample(np.random.default_rng(6), odd_n, batch=b)
+        assert c.shape == (odd_n, 2) and k.shape == (odd_n, 2)
+        assert np.isfinite(c).all()
+        assert all(k[:, j].max() < card
+                   for j, card in enumerate(schema.cat_cards))
+
+
 def test_embed_dim_rule():
     """Paper §12: min(600, round(1.6·|D|^0.56))."""
     s = TableSchema(n_cont=0, cat_cards=(2, 100, 10 ** 6))

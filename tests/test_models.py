@@ -58,6 +58,7 @@ def test_arch_smoke_loss_and_decode(arch):
 
 
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-7b", "zamba2-1.2b"])
+@pytest.mark.slow
 def test_prefill_decode_matches_full_forward(arch):
     """prefill(t[:k]) + decode(t[k]) logits == full forward logits at k.
     f32: the chunked-vs-stepwise orders differ, so bf16 noise compounds."""

@@ -4,6 +4,7 @@ bounds, rank-matching bijectivity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import metrics as M
@@ -11,6 +12,7 @@ from repro.graph.ops import Graph
 from repro.models import moe as moe_mod
 
 
+@pytest.mark.slow
 @given(st.integers(0, 10 ** 6), st.integers(1, 8), st.integers(2, 32),
        st.integers(1, 8))
 @settings(max_examples=30, deadline=None)

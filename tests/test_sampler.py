@@ -177,6 +177,7 @@ def test_xla_wide_ids_n34():
     assert int(s.max()) > 2 ** 31          # ids actually leave int32 range
 
 
+@pytest.mark.slow
 def test_generate_streamed_n34_int64_roundtrip(tmp_path):
     """Acceptance: a 2^34-node fit generates via generate_streamed with
     id_dtype=int64 and ShardedGraphDataset.verify() passes, all ids in
@@ -338,6 +339,7 @@ def test_chunk_plan_int64_prefixes_beyond_int32():
     KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=11, m=11, E=30_000,
                  noise=0.03),
 ], ids=["rectangular", "noisy"])
+@pytest.mark.slow
 def test_chunked_equals_streamed_golden_seed(fit, tmp_path):
     """Same seed ⇒ the in-memory chunked sampler and the datastream job
     produce identical edge multisets, on rectangular and noisy fits."""

@@ -58,6 +58,7 @@ def test_fit_structure_roundtrip():
     assert abs(fit.q - true.q) < 0.08, (fit.q, true.q)
 
 
+@pytest.mark.slow
 def test_chunked_equals_unchunked_distribution():
     fit = KroneckerFit(a=0.5, b=0.2, c=0.2, d=0.1, n=10, m=10, E=50000)
     s1, d1 = rmat.sample_graph(jax.random.PRNGKey(0), fit)

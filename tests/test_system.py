@@ -29,6 +29,7 @@ def fitted_ours(reference):
     return pipe
 
 
+@pytest.mark.slow
 def test_table2_ours_beats_random(reference, fitted_ours):
     """Directional reproduction of Table 2: fitted pipeline beats the
     ER+random baseline on structure and features."""
@@ -47,6 +48,7 @@ def test_table2_ours_beats_random(reference, fitted_ours):
     assert ours["dcc"] < rand["dcc"]
 
 
+@pytest.mark.slow
 def test_table5_scaling_preserves_degree_dist(reference, fitted_ours):
     """Table 5/Fig 7: the degree-distribution score survives 2× scaling."""
     g, cont, cat = reference
@@ -82,6 +84,7 @@ def test_table6_aligner_component_matters(reference):
             < res["random"]["degree_feat_dist"]), res
 
 
+@pytest.mark.slow
 def test_chunked_generation_equals_oneshot(reference, fitted_ours):
     """App. 10: chunked generation matches one-shot statistically."""
     g, cont, cat = reference

@@ -119,6 +119,7 @@ def test_sharded_loader_slices_per_host():
     assert b["tokens"].shape == (4, 8)          # 16 / 4 hosts
 
 
+@pytest.mark.slow
 def test_serving_engine_matches_sequential_decode():
     cfg = _tiny_cfg()
     model = Model(cfg)
