@@ -19,8 +19,10 @@ OUT_DIR = "results/bench"
 
 def _materialize(fit, out, double_buffered, shard_edges):
     t0 = time.time()
+    # pipeline_depth=0: this benchmark isolates the chunk-level
+    # device→host pump; executor-level overlap is executor_overlap.py
     job = DatasetJob(fit, out, shard_edges=shard_edges, seed=0,
-                     double_buffered=double_buffered)
+                     double_buffered=double_buffered, pipeline_depth=0)
     job.run()
     dt = time.time() - t0
     assert ShardedGraphDataset(out).total_edges == fit.E

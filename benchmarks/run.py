@@ -24,6 +24,7 @@ TABLES = [
     "roofline",
     "datastream_throughput",
     "feature_throughput",
+    "executor_overlap",
 ]
 
 

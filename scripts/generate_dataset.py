@@ -88,10 +88,27 @@ def main(argv=None) -> int:
                     help="stop after N shards (incremental progress)")
     ap.add_argument("--resume", action="store_true",
                     help="continue an interrupted job in --out")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="shards queued per executor stage: 0 = serial "
+                         "loop, >=1 overlaps device struct sampling with "
+                         "host feature decode and writer flush (output is "
+                         "byte-identical either way; memory scales with "
+                         "depth). Default 2")
+    ap.add_argument("--host-workers", type=int, default=1,
+                    help="threads in the executor's host feature stage "
+                         "(per-shard draws are independent pure "
+                         "functions, so >1 stays deterministic)")
     ap.add_argument("--serial", action="store_true",
-                    help="disable double buffering (debug/benchmark)")
+                    help="fully serial generation: pipeline depth 0 plus "
+                         "no chunk double buffering (debug/benchmark "
+                         "baseline)")
     ap.add_argument("--verify", action="store_true",
-                    help="deep-verify the dataset after generation")
+                    help="deep-verify after generation: re-CRC every "
+                         "column in streamed blocks (bounded memory even "
+                         "for >RAM datasets)")
+    ap.add_argument("--verify-deep", action="store_true",
+                    help="alias of --verify (kept explicit so scripts can "
+                         "name the deep semantics)")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -105,14 +122,19 @@ def main(argv=None) -> int:
                          seed=args.seed, k_pref=args.k_pref,
                          num_workers=args.workers,
                          double_buffered=not args.serial, mode=args.mode,
-                         backend=args.backend, id_dtype=args.id_dtype)
+                         backend=args.backend, id_dtype=args.id_dtype,
+                         pipeline_depth=(0 if args.serial
+                                         else args.pipeline_depth),
+                         host_workers=args.host_workers)
     except (KeyError, ValueError) as e:
         raise SystemExit(f"error: {e}")
     print(f"plan: E={fit.E:,} edges, 2^{fit.n}×2^{fit.m} ids "
           f"({np.dtype(job.dtype).name}), "
           f"k_pref={job.k_pref}, {len(job.scheduler.shards)} shards "
           f"(max {job.scheduler.max_shard_edges:,} edges/shard), "
-          f"mode={args.mode}, backend={job.backend}", file=sys.stderr)
+          f"mode={args.mode}, backend={job.backend}, "
+          f"pipeline_depth={job.pipeline_depth}, "
+          f"host_workers={job.host_workers}", file=sys.stderr)
     t0 = time.time()
     try:
         manifest = job.run(resume=args.resume, max_shards=args.max_shards,
@@ -125,20 +147,25 @@ def main(argv=None) -> int:
         raise SystemExit(f"error: {e}")
     dt = time.time() - t0
     done = manifest.done_edges()
+    t = job.timings
     print(f"materialized {len(manifest.done_ids())}/"
           f"{len(manifest.shards)} shards, {done:,} edges "
           f"in {dt:.1f}s ({done / max(dt, 1e-9):,.0f} edges/s)",
           file=sys.stderr)
+    print(f"stages: struct {t['gen_struct_s']:.1f}s, "
+          f"feat {t['gen_feat_s']:.1f}s, align {t['gen_align_s']:.1f}s, "
+          f"write {t['write_s']:.1f}s busy over {t['wall_s']:.1f}s wall "
+          f"(overlap {t['overlap']:.2f}x)", file=sys.stderr)
     if manifest.is_complete():
         ds = ShardedGraphDataset(args.out)
         assert ds.total_edges == fit.E
-        if args.verify:
+        if args.verify or args.verify_deep:
             problems = ds.verify(deep=True)
             if problems:
                 print("VERIFY FAILED:", *problems, sep="\n  ",
                       file=sys.stderr)
                 return 1
-            print("verify: ok (deep)", file=sys.stderr)
+            print("verify: ok (deep, streamed crc)", file=sys.stderr)
     elif not args.max_shards and args.worker is None:
         return 1
     return 0

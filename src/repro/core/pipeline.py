@@ -40,6 +40,11 @@ class PipelineTimings:
     gen_struct_s: float = 0.0
     gen_feat_s: float = 0.0
     gen_align_s: float = 0.0
+    # streamed generation only: writer-stage busy time, end-to-end wall
+    # time, and busy/wall overlap factor (>1 ⇒ stages ran concurrently)
+    gen_write_s: float = 0.0
+    gen_wall_s: float = 0.0
+    gen_overlap: float = 0.0
 
 
 class SyntheticGraphPipeline:
@@ -145,7 +150,8 @@ class SyntheticGraphPipeline:
                           include_features: bool = True,
                           double_buffered: bool = True,
                           resume: bool = False, mode: str = "chunks",
-                          backend: Optional[str] = None, id_dtype=None):
+                          backend: Optional[str] = None, id_dtype=None,
+                          pipeline_depth: int = 2, host_workers: int = 1):
         """Materialize the generated graph to a sharded on-disk dataset
         instead of host memory (see ``repro.datastream``) — the path for
         outputs that exceed RAM.  Returns a ``ShardedGraphDataset``.
@@ -156,10 +162,18 @@ class SyntheticGraphPipeline:
 
         Features/alignment ride along per shard when the pipeline is
         fitted with edge features; node-feature pipelines stream structure
-        only (cross-shard node identity is not streamed).  Timings are
-        split per stage: ``gen_struct_s`` covers edge sampling only, and
-        the per-shard feature draw / alignment land in ``gen_feat_s`` /
-        ``gen_align_s`` (they used to be lumped into ``gen_struct_s``).
+        only (cross-shard node identity is not streamed).
+
+        ``pipeline_depth``/``host_workers`` configure the staged shard
+        executor: depth 0 is the serial loop, ``>=1`` overlaps device
+        struct sampling with the host feature stage (a pool of
+        ``host_workers`` threads) and the async writer flush — output is
+        byte-identical either way.  Timings are split per stage *busy*
+        time: ``gen_struct_s`` covers edge sampling only, the per-shard
+        feature draw / alignment land in ``gen_feat_s`` /
+        ``gen_align_s``, writes in ``gen_write_s``; ``gen_wall_s`` is
+        end-to-end and ``gen_overlap`` (busy/wall) reports how much the
+        pipeline actually hid.
         """
         from repro.datastream import DatasetJob, FeatureSpec
 
@@ -176,9 +190,13 @@ class SyntheticGraphPipeline:
         job = DatasetJob(fit, out_dir, shard_edges=shard_edges, seed=seed,
                          k_pref=k_pref, double_buffered=double_buffered,
                          mode=mode, features=features, backend=backend,
-                         id_dtype=id_dtype)
+                         id_dtype=id_dtype, pipeline_depth=pipeline_depth,
+                         host_workers=host_workers)
         job.run(resume=resume)
         self.timings.gen_struct_s = job.timings["gen_struct_s"]
         self.timings.gen_feat_s = job.timings["gen_feat_s"]
         self.timings.gen_align_s = job.timings["gen_align_s"]
+        self.timings.gen_write_s = job.timings["write_s"]
+        self.timings.gen_wall_s = job.timings["wall_s"]
+        self.timings.gen_overlap = job.timings["overlap"]
         return job.dataset()

@@ -3,27 +3,43 @@
 The paper claims generation at trillion-edge scale, but the in-memory
 paths (``rmat.sample_graph*``, ``SyntheticGraphPipeline.generate``) cap
 out at what fits in host RAM.  This subsystem turns the chunked sampler
-into a dataset *service*: a deterministic chunk scheduler, a sharded
-on-disk edge/feature store written through a double-buffered
-device→host pump, a manifest-driven reader, and a resumable job API.
+into a dataset *service*, split into focused layers:
+
+* ``scheduler`` — deterministic chunk → shard → worker planning
+* ``source``    — ``ShardSource``: one shard's structure (and
+  ``FeatureSpec``: its features) as a pure ``(fit, seed, shard_id)``
+  function; ``ChunkShardSource`` vs ``DeviceStepShardSource``
+* ``executor``  — ``ShardExecutor``: the staged pipeline overlapping
+  device struct sampling, host feature decode/align and writer flush
+  (byte-identical to the serial loop, which ``pipeline_depth=0`` runs)
+* ``writer``    — sharded on-disk store, journaled progress, async flush
+* ``reader``    — manifest-driven mmap-ed access + streamed deep verify
+* ``service``   — ``DatasetJob``: the resumable plan→run→verify facade
 
     from repro.datastream import DatasetJob, ShardedGraphDataset
 
-    job = DatasetJob(fit, out_dir="/data/ds", shard_edges=1 << 20)
+    job = DatasetJob(fit, out_dir="/data/ds", shard_edges=1 << 20,
+                     pipeline_depth=2, host_workers=2)
     job.run()                       # or job.resume() after an interrupt
     ds = ShardedGraphDataset("/data/ds")
     for block in ds:                # bounded-memory iteration
         train_step(block.src, block.dst, block.cont)
 """
+from repro.datastream.executor import ExecutorStats, ShardExecutor
 from repro.datastream.reader import ShardBlock, ShardedGraphDataset
 from repro.datastream.scheduler import ChunkScheduler, ShardPlan, auto_k_pref
-from repro.datastream.service import DatasetJob, FeatureSpec
-from repro.datastream.writer import (MANIFEST_NAME, Manifest, ShardRecord,
-                                     ShardWriter, pump_chunks)
+from repro.datastream.service import DatasetJob
+from repro.datastream.source import (ChunkShardSource, DeviceStepShardSource,
+                                     FeatureSpec, ShardSource)
+from repro.datastream.writer import (MANIFEST_NAME, AsyncFlushQueue, Manifest,
+                                     ShardRecord, ShardWriter, pump_chunks)
 
 __all__ = [
     "ChunkScheduler", "ShardPlan", "auto_k_pref",
-    "Manifest", "ShardRecord", "ShardWriter", "pump_chunks", "MANIFEST_NAME",
+    "Manifest", "ShardRecord", "ShardWriter", "AsyncFlushQueue",
+    "pump_chunks", "MANIFEST_NAME",
     "ShardedGraphDataset", "ShardBlock",
+    "ShardSource", "ChunkShardSource", "DeviceStepShardSource",
+    "ShardExecutor", "ExecutorStats",
     "DatasetJob", "FeatureSpec",
 ]

@@ -166,7 +166,10 @@ class ShardedGraphDataset:
         Checks: per-shard files exist with the planned row counts, shard
         edge counts sum exactly to ``total_edges``, observed id ranges fall
         inside the address space; ``deep`` additionally re-hashes every
-        column against the manifest crc32.
+        column against the manifest crc32 — in streamed
+        ``writer.CRC_BLOCK_ROWS`` blocks over the memory map, so
+        deep-verifying a dataset far larger than RAM stays
+        bounded-memory (CLI: ``generate_dataset.py --verify-deep``).
         """
         problems: List[str] = []
         writer = ShardWriter(self.path, self.manifest)

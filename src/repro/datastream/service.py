@@ -1,51 +1,50 @@
 """The ``DatasetJob`` API: plan → run → resume → verify.
 
-Wires the ``ChunkScheduler`` and ``ShardWriter`` to either
+A thin planner/facade over the three focused layers of the subsystem:
 
-* ``mode="chunks"`` — the local chunked sampler (``rmat.sample_chunk``
-  through the ``repro.core.sampler`` engine backend recorded in the
-  manifest), one shard = a run of id-disjoint prefix chunks; or
-* ``mode="device_steps"`` — ``core.distributed_gen.device_generate`` over
-  the full device mesh, one shard = one generation step with
-  step-indexed seeds (resumption-deterministic).  NOTE: this is the
-  pod-scale *throughput* path (paper App. 10's zero-collective design):
-  every device emits the same edge count under its own src prefix, so
-  the top ``log2(n_dev)`` src levels are uniform rather than
-  θ-distributed.  Use ``mode="chunks"`` (θ-weighted chunk plan) when
-  distributional fidelity of the full graph matters.
+* ``repro.datastream.source`` — ``ShardSource``: one shard's structure
+  (and ``FeatureSpec``: its features) as a pure function of
+  ``(fit, seed, shard_id)``.  Two sources exist: ``ChunkShardSource``
+  (``mode="chunks"``, θ-weighted chunk plan — full distributional
+  fidelity) and ``DeviceStepShardSource`` (``mode="device_steps"``,
+  pod-scale zero-collective device steps — the top ``log2(n_dev)`` src
+  levels are uniform; see the source module docstring for the
+  trade-off).
+* ``repro.datastream.executor`` — ``ShardExecutor``: the staged
+  pipeline overlapping device struct sampling, host feature
+  decode/alignment and writer flush (``pipeline_depth=0`` is the exact
+  serial loop; output is byte-identical either way).
+* ``repro.datastream.writer`` / ``scheduler`` — durable sharded store +
+  deterministic chunk→shard planning.
 
-Feature generation + alignment plug in *per shard* (``FeatureSpec``): the
-fitted feature generator samples exactly the shard's edge count, and the
-aligner runs against a shard-local id-compacted subgraph, so attribute
-memory never exceeds one shard.  Every shard is a pure function of
-``(fit, seed, shard_id)`` — resuming a killed job regenerates only the
-missing shards, byte-identical to an uninterrupted run.
+``DatasetJob`` owns planning (manifest + provenance), resume validation
+(refusing configs whose PRNG streams differ) and stitches
+source+executor+writer together; it no longer contains generation code.
+Resuming a killed job regenerates only the missing shards,
+byte-identical to an uninterrupted run.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import os
-import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rmat
-from repro.core.descend import (check_id_capacity, combine_ids,
-                                default_id_dtype)
-from repro.core.sampler import get_backend, resolve_backend
+from repro.core.descend import check_id_capacity, default_id_dtype
+from repro.core.sampler import resolve_backend
 from repro.core.structure import KroneckerFit
+from repro.datastream.executor import ShardExecutor
 from repro.datastream.reader import ShardedGraphDataset
 from repro.datastream.scheduler import ChunkScheduler
-from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter,
-                                     pump_chunks)
-from repro.graph.ops import Graph
-from repro.utils import accepts_kwarg, call_with_optional_kwargs
+from repro.datastream.source import (ChunkShardSource, DeviceStepShardSource,
+                                     FeatureSpec, ShardSource)
+from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter)
+from repro.utils import accepts_kwarg
 
-_FEATURE_SALT = 0xFEA7
+__all__ = ["DatasetJob", "FeatureSpec"]
 
 #: stream marker recorded for device_steps manifests: the shard_map body
 #: now draws all L level keys with one split (shared descend core), a
@@ -53,71 +52,6 @@ _FEATURE_SALT = 0xFEA7
 #: resuming an old device_steps dataset must refuse, not silently mix
 #: streams.  Bump when the device stream changes again.
 _DEVICE_STREAM = "device_descend_v2"
-
-
-@dataclasses.dataclass
-class FeatureSpec:
-    """Per-shard feature generation: a *fitted* generator (+ optional
-    fitted aligner).  Only edge features stream (node features would need
-    cross-shard node identity; see reader.batches for training access).
-
-    ``batch`` fixes the padded jit batch size of the batched feature
-    engine (GAN sample + decode, packed GBDT inference) — ``None`` lets
-    the caller (``DatasetJob``) derive it from ``shard_edges`` so every
-    shard reuses one compiled shape.  ``feat_s``/``align_s`` accumulate
-    wall-time so the pipeline can report feature/align cost separately
-    from structure generation."""
-    generator: Any                      # .sample(rng, n) -> (cont, cat)
-    aligner: Any = None                 # .align(g, cont, cat, rng)
-    batch: Optional[int] = None
-    feat_s: float = 0.0
-    align_s: float = 0.0
-
-    def describe(self) -> dict:
-        schema = getattr(self.generator, "schema", None)
-        if schema is None:
-            return {"n_cont": None, "cat_cards": None}
-        return {"n_cont": int(schema.n_cont),
-                "cat_cards": [int(c) for c in schema.cat_cards]}
-
-    def sample_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
-                         dst: np.ndarray, bipartite: bool,
-                         batch: Optional[int] = None):
-        """Deterministic per-shard draw + shard-local alignment.
-
-        Alignment uses structural features of the id-compacted shard
-        subgraph (degrees/PageRank *within* the shard) — a bounded-memory
-        approximation of the global §3.4 alignment.
-        """
-        rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
-        b = batch or self.batch
-        t0 = time.perf_counter()
-        cont, cat = call_with_optional_kwargs(self.generator.sample, rng,
-                                              len(src), batch=b)
-        self.feat_s += time.perf_counter() - t0
-        if self.aligner is not None and len(src):
-            # id compaction is part of the alignment cost
-            t0 = time.perf_counter()
-            g_local = _compact_subgraph(src, dst, bipartite)
-            cont, cat = call_with_optional_kwargs(
-                self.aligner.align, g_local, cont, cat, rng, batch=b)
-            self.align_s += time.perf_counter() - t0
-        return cont, cat
-
-
-def _compact_subgraph(src: np.ndarray, dst: np.ndarray,
-                      bipartite: bool) -> Graph:
-    """Remap a shard's global ids onto a dense local id space (≤ 2E nodes)
-    so per-node structural features stay shard-sized."""
-    if bipartite:
-        su, si = np.unique(src, return_inverse=True)
-        du, di = np.unique(dst, return_inverse=True)
-        return Graph(si.astype(np.int32), di.astype(np.int32),
-                     len(su), len(du), bipartite=True)
-    ids = np.unique(np.concatenate([src, dst]))
-    si = np.searchsorted(ids, src).astype(np.int32)
-    di = np.searchsorted(ids, dst).astype(np.int32)
-    return Graph(si, di, len(ids), len(ids), bipartite=False)
 
 
 def _edge_dtype(fit: KroneckerFit, id_dtype=None):
@@ -133,14 +67,23 @@ def _edge_dtype(fit: KroneckerFit, id_dtype=None):
 
 
 class DatasetJob:
-    """Resumable streaming materialization of one synthetic graph."""
+    """Resumable streaming materialization of one synthetic graph.
+
+    ``pipeline_depth``/``host_workers`` configure the executor:
+    ``pipeline_depth=0`` runs the serial loop, ``>=1`` overlaps device
+    struct sampling with host feature decode and writer flush (at most
+    ``pipeline_depth`` shards queued per stage — memory scales with it).
+    Both knobs are provenance-recorded in the manifest but never
+    validated on resume: the executor is byte-transparent, so any
+    depth/worker combination regenerates identical shards."""
 
     def __init__(self, fit: KroneckerFit, out_dir: str,
                  shard_edges: int = 1 << 20, seed: int = 0,
                  k_pref: Optional[int] = None, num_workers: int = 1,
                  double_buffered: bool = True, mode: str = "chunks",
                  features: Optional[FeatureSpec] = None,
-                 backend: Optional[str] = None, id_dtype=None):
+                 backend: Optional[str] = None, id_dtype=None,
+                 pipeline_depth: int = 2, host_workers: int = 1):
         assert mode in ("chunks", "device_steps"), mode
         self.fit = fit
         self.out_dir = out_dir
@@ -150,10 +93,14 @@ class DatasetJob:
         self.double_buffered = double_buffered
         self.mode = mode
         self.features = features
+        self.pipeline_depth = int(pipeline_depth)
+        self.host_workers = int(host_workers)
         self.dtype = _edge_dtype(fit, id_dtype)
-        # per-stage wall time of the last run() call (README "timings")
+        # per-stage wall time of the last run() call (README "timings"):
+        # busy seconds per stage plus wall_s/overlap from the executor
         self.timings: Dict[str, float] = {
-            "gen_struct_s": 0.0, "gen_feat_s": 0.0, "gen_align_s": 0.0}
+            "gen_struct_s": 0.0, "gen_feat_s": 0.0, "gen_align_s": 0.0,
+            "write_s": 0.0, "wall_s": 0.0, "overlap": 0.0}
         # resolve the engine backend by name at plan time: the chosen
         # name is recorded in the manifest (streams differ per backend,
         # so a resume on a different host must not silently switch).
@@ -187,6 +134,23 @@ class DatasetJob:
             fit, shard_edges=self.shard_edges, k_pref=k_pref,
             num_workers=self.num_workers, seed=self.seed)
         self.k_pref = self.scheduler.k_pref
+        self._source: Optional[ShardSource] = None
+
+    # -- the shard source (structure generation) ---------------------------
+    @property
+    def source(self) -> ShardSource:
+        """The mode's ``ShardSource``, built once per job (device_steps
+        caches its jitted mesh step across shards)."""
+        if self._source is None:
+            if self.mode == "chunks":
+                self._source = ChunkShardSource(
+                    self.scheduler, self.backend, self.dtype,
+                    double_buffered=self.double_buffered)
+            else:
+                self._source = DeviceStepShardSource(
+                    self.fit, self.scheduler.thetas, self.shard_edges,
+                    self.seed, self.dtype)
+        return self._source
 
     def _feature_batch(self) -> Optional[int]:
         if self.features is None:
@@ -255,12 +219,19 @@ class DatasetJob:
             n_dev=(len(jax.devices()) if self.mode == "device_steps"
                    else None),
             features=self._features_meta(),
+            executor={"pipeline_depth": self.pipeline_depth,
+                      "host_workers": self.host_workers},
             shards=shards)
         os.makedirs(self.out_dir, exist_ok=True)
         manifest.save(self.out_dir)
         return manifest
 
     def _device_step_records(self) -> List[ShardRecord]:
+        """Device-step shards stripe round-robin across the worker queues
+        (every step costs the same mesh-wide step, so striping is also
+        load-balanced).  The recorded ``worker`` is plan-time provenance;
+        ``run(worker=)`` re-stripes with the running job's num_workers so
+        resume can scale the process count up or down."""
         step_edges = self.shard_edges
         n_steps = max(1, math.ceil(self.fit.E / step_edges))
         recs = []
@@ -268,15 +239,17 @@ class DatasetJob:
         for s in range(n_steps):
             n_e = min(step_edges, left)
             left -= n_e
-            recs.append(ShardRecord(s, f"shard-{s:05d}", [], n_e))
+            recs.append(ShardRecord(s, f"shard-{s:05d}", [], n_e,
+                                    worker=s % self.num_workers))
         return recs
 
     # -- run / resume ------------------------------------------------------
     def run(self, resume: bool = False, max_shards: Optional[int] = None,
             worker: Optional[int] = None) -> Manifest:
-        """Materialize pending shards.  ``max_shards`` bounds this call
-        (simulating preemption / incremental progress); ``worker`` restricts
-        to one worker's queue so N processes can run disjoint shard sets."""
+        """Materialize pending shards through the executor.
+        ``max_shards`` bounds this call (simulating preemption /
+        incremental progress); ``worker`` restricts to one worker's queue
+        so N processes can run disjoint shard sets."""
         if resume and Manifest.exists(self.out_dir):
             manifest = self._load_validated()
         else:
@@ -288,41 +261,45 @@ class DatasetJob:
                 if rec.status == "done" and \
                         not writer.shard_ok_on_disk(rec):
                     rec.status = "pending"
-        by_worker = {s.shard_id: s.worker
-                     for s in self.scheduler.shards} \
-            if self.mode == "chunks" else {}
-        n_done = 0
-        t_struct = 0.0
-        feat0 = (self.features.feat_s, self.features.align_s) \
-            if self.features is not None else (0.0, 0.0)
-        feat_batch = self._feature_batch()
-        for rec in manifest.shards:
-            if rec.status == "done":
-                continue
-            if worker is not None and by_worker.get(rec.shard_id, 0) != worker:
-                continue
-            if max_shards is not None and n_done >= max_shards:
-                break
-            t0 = time.perf_counter()
-            arrays = (self._generate_shard_chunks(rec)
-                      if self.mode == "chunks"
-                      else self._generate_shard_device_step(rec))
-            t_struct += time.perf_counter() - t0
-            if self.features is not None:
-                cont, cat = self.features.sample_for_shard(
-                    self.seed, rec.shard_id, arrays["src"], arrays["dst"],
-                    self.fit.bipartite, batch=feat_batch)
-                arrays["cont"] = np.asarray(cont, np.float32)
-                arrays["cat"] = np.asarray(cat, np.int32)
-            writer.write_shard(rec.shard_id, arrays)
-            n_done += 1
-        writer.checkpoint()
-        self.timings = {
-            "gen_struct_s": t_struct,
-            "gen_feat_s": (self.features.feat_s - feat0[0]
-                           if self.features is not None else 0.0),
-            "gen_align_s": (self.features.align_s - feat0[1]
-                            if self.features is not None else 0.0)}
+        # worker queues come from *this* job's configuration, not the
+        # manifest: shard composition is num_workers-independent (chunks
+        # pack first-fit, device steps stripe), so a resume may re-stripe
+        # the remaining shards across a different --workers count — N
+        # processes with worker=0..N-1 always cover disjoint queues.
+        if worker is not None and not 0 <= worker < self.num_workers:
+            raise ValueError(f"worker={worker} outside this job's "
+                             f"0..{self.num_workers - 1} worker queues "
+                             f"(num_workers={self.num_workers})")
+        if self.mode == "chunks":
+            by_worker = {s.shard_id: s.worker
+                         for s in self.scheduler.shards}
+            assigned = lambda rec: by_worker.get(rec.shard_id, 0)  # noqa: E731
+        else:
+            assigned = lambda rec: rec.shard_id % self.num_workers  # noqa: E731
+        records = [rec for rec in manifest.shards
+                   if rec.status != "done"
+                   and (worker is None or assigned(rec) == worker)]
+        if max_shards is not None:
+            records = records[:max_shards]
+        executor = ShardExecutor(
+            self.source, writer, features=self.features, seed=self.seed,
+            bipartite=self.fit.bipartite,
+            feature_batch=self._feature_batch(),
+            pipeline_depth=self.pipeline_depth,
+            host_workers=self.host_workers)
+        try:
+            executor.run(records)
+        finally:
+            # the journal already holds every committed shard; compacting
+            # here (even after a failure) just folds it into the manifest
+            writer.checkpoint()
+            self.timings = {
+                "gen_struct_s": executor.stats.struct_s,
+                "gen_feat_s": executor.stats.feat_s,
+                "gen_align_s": executor.stats.align_s,
+                "write_s": executor.stats.write_s,
+                "wall_s": executor.stats.wall_s,
+                "overlap": executor.stats.overlap}
         return manifest
 
     def resume(self, max_shards: Optional[int] = None,
@@ -336,100 +313,6 @@ class DatasetJob:
 
     def dataset(self, **kwargs) -> ShardedGraphDataset:
         return ShardedGraphDataset(self.out_dir, **kwargs)
-
-    # -- generation backends ----------------------------------------------
-    def _generate_shard_chunks(self, rec: ShardRecord
-                               ) -> Dict[str, np.ndarray]:
-        """Double-buffered chunk loop into a preallocated shard buffer.
-
-        Wide (int64) ids dispatch the backend's device-resident
-        ``(hi, lo)`` id words and combine them host-side in ``flush`` —
-        combining inside dispatch would force a device sync per chunk
-        and silently serialize the double-buffered pump."""
-        sched = self.scheduler
-        np_dtype = np.dtype(self.dtype)
-        src_buf = np.empty(rec.n_edges, np_dtype)
-        dst_buf = np.empty(rec.n_edges, np_dtype)
-        chunks = [sched.chunk(i) for i in rec.chunk_indices]
-        offsets = dict(zip(rec.chunk_indices,
-                           np.cumsum([0] + [c.n_edges for c in chunks])))
-        wide = np_dtype.itemsize > 4
-        if wide:
-            be = get_backend(self.backend)
-            suffix = np.asarray(sched.thetas)[self.k_pref:]
-            n_s = self.fit.n - self.k_pref
-            m_s = self.fit.m - self.k_pref
-
-        def dispatch(ck):
-            if wide:
-                return be.sample_parts(sched.key_for(ck), suffix,
-                                       n_s, m_s, ck.n_edges)
-            return rmat.sample_chunk(sched.key_for(ck), self.fit, ck,
-                                     self.k_pref, sched.thetas,
-                                     dtype=self.dtype,
-                                     backend=self.backend)
-
-        def flush(ck, host):
-            off = offsets[ck.index]
-            if wide:
-                sparts, dparts = host   # backend may pad past ck.n_edges
-                s = combine_ids(sparts, n_s, np_dtype,
-                                prefix=ck.src_prefix)[: ck.n_edges]
-                d = combine_ids(dparts, m_s, np_dtype,
-                                prefix=ck.dst_prefix)[: ck.n_edges]
-            else:
-                s, d = host
-            src_buf[off: off + ck.n_edges] = s
-            dst_buf[off: off + ck.n_edges] = d
-
-        pump_chunks(chunks, dispatch, flush,
-                    double_buffered=self.double_buffered)
-        return {"src": src_buf, "dst": dst_buf}
-
-    def _device_step_setup(self):
-        """Build the mesh + jitted step function once per job: every step
-        shares shapes, so the shard_map trace/compile is paid a single
-        time and steps differ only in their seed vector."""
-        if not hasattr(self, "_dev_step"):
-            from jax.sharding import Mesh
-
-            from repro.core.distributed_gen import device_generate
-
-            mesh = Mesh(np.array(jax.devices()), ("d",))
-            n_dev = mesh.size
-            k_dev = int(np.log2(n_dev))
-            if 2 ** k_dev != n_dev:
-                raise ValueError(
-                    f"device count {n_dev} must be a power of two")
-            n_loc = self.fit.n - k_dev
-            epd = math.ceil(self.shard_edges / n_dev)
-            # full θ rows: the shared descend runs max(n_loc, m) levels
-            # (dst keeps all m levels; only src loses k_dev to the device
-            # prefix), so offsetting rows by k_dev would both starve the
-            # last k_dev dst levels and misalign the square levels.
-            thetas = jnp.asarray(self.scheduler.thetas, jnp.float32)
-
-            @jax.jit
-            def step(seeds):
-                return device_generate(thetas, seeds, n_loc, self.fit.m,
-                                       epd, mesh, dtype=self.dtype)
-
-            self._dev_step = (step, n_dev)
-        return self._dev_step
-
-    def _generate_shard_device_step(self, rec: ShardRecord
-                                    ) -> Dict[str, np.ndarray]:
-        """One mesh-wide generation step == one shard; the step index (==
-        shard id) seeds the per-device streams, so any step can be
-        regenerated in isolation."""
-        from repro.core.distributed_gen import step_seeds
-
-        step, n_dev = self._device_step_setup()
-        seeds = step_seeds(self.seed, rec.shard_id, n_dev)
-        src, dst = step(jnp.asarray(seeds))
-        src = np.asarray(jax.device_get(src)).reshape(-1)
-        dst = np.asarray(jax.device_get(dst)).reshape(-1)
-        return {"src": src[: rec.n_edges], "dst": dst[: rec.n_edges]}
 
     # -- resume validation -------------------------------------------------
     def _load_validated(self) -> Manifest:
@@ -460,4 +343,8 @@ class DatasetJob:
                 f"manifest at {self.out_dir} was written by a different "
                 f"job configuration; refusing to resume (mismatch: "
                 f"{sorted(diffs)})")
+        # executor knobs are byte-transparent provenance: refresh them to
+        # this run's values so the compacted manifest reflects reality
+        manifest.executor = {"pipeline_depth": self.pipeline_depth,
+                             "host_workers": self.host_workers}
         return manifest

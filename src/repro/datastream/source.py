@@ -1,0 +1,256 @@
+"""``ShardSource``: one shard's structure as a pure function.
+
+``DatasetJob`` used to braid two generation modes through its own method
+bodies; this module extracts them behind one contract so the executor
+(``repro.datastream.executor``) and the sources are independently
+testable:
+
+* ``ChunkShardSource`` — the θ-weighted chunk plan (``mode="chunks"``):
+  one shard = a run of id-disjoint prefix chunks, sampled through the
+  ``repro.core.sampler`` engine backend and pumped double-buffered from
+  the device.  Full distributional fidelity (every src/dst level is
+  θ-distributed).
+* ``DeviceStepShardSource`` — pod-scale device steps
+  (``mode="device_steps"``): one shard = one mesh-wide generation step
+  with step-indexed seeds (paper App. 10's zero-collective design).
+  Maximum throughput, but every device emits the same edge count under
+  its own src prefix, so the top ``log2(n_dev)`` src levels are uniform
+  rather than θ-distributed.
+
+Either way ``generate(rec)`` is a pure function of
+``(fit, seed, shard_id)`` — byte-identical on regeneration, which is
+what makes kill/resume and the pipelined executor's golden-seed
+equivalence hold.  ``generate`` owns the device: it must be called from
+a single thread (the executor's struct stage); the returned arrays are
+freshly allocated per shard, never reused buffers.
+
+``FeatureSpec`` (the per-shard feature/alignment draw) lives here too —
+it is the other pure per-shard function, consumed by the executor's host
+stage, possibly from several worker threads at once (its stage timers
+accumulate under a lock).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmat
+from repro.core.descend import combine_ids
+from repro.core.sampler import get_backend
+from repro.core.structure import KroneckerFit
+from repro.datastream.scheduler import ChunkScheduler
+from repro.datastream.writer import ShardRecord, pump_chunks
+from repro.graph.ops import Graph
+from repro.utils import call_with_optional_kwargs
+
+_FEATURE_SALT = 0xFEA7
+
+
+@dataclasses.dataclass
+class FeatureSpec:
+    """Per-shard feature generation: a *fitted* generator (+ optional
+    fitted aligner).  Only edge features stream (node features would need
+    cross-shard node identity; see reader.batches for training access).
+
+    ``batch`` fixes the padded jit batch size of the batched feature
+    engine (GAN sample + decode, packed GBDT inference) — ``None`` lets
+    the caller (``DatasetJob``) derive it from ``shard_edges`` so every
+    shard reuses one compiled shape.  ``feat_s``/``align_s`` accumulate
+    wall-time so the pipeline can report feature/align cost separately
+    from structure generation; the executor's host stage may draw several
+    shards concurrently, so the accumulation is lock-guarded."""
+    generator: Any                      # .sample(rng, n) -> (cont, cat)
+    aligner: Any = None                 # .align(g, cont, cat, rng)
+    batch: Optional[int] = None
+    feat_s: float = 0.0
+    align_s: float = 0.0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def describe(self) -> dict:
+        schema = getattr(self.generator, "schema", None)
+        if schema is None:
+            return {"n_cont": None, "cat_cards": None}
+        return {"n_cont": int(schema.n_cont),
+                "cat_cards": [int(c) for c in schema.cat_cards]}
+
+    def sample_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
+                         dst: np.ndarray, bipartite: bool,
+                         batch: Optional[int] = None):
+        """Deterministic per-shard draw + shard-local alignment.
+
+        Alignment uses structural features of the id-compacted shard
+        subgraph (degrees/PageRank *within* the shard) — a bounded-memory
+        approximation of the global §3.4 alignment.
+        """
+        rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
+        b = batch or self.batch
+        t0 = time.perf_counter()
+        cont, cat = call_with_optional_kwargs(self.generator.sample, rng,
+                                              len(src), batch=b)
+        dt_feat = time.perf_counter() - t0
+        dt_align = 0.0
+        if self.aligner is not None and len(src):
+            # id compaction is part of the alignment cost
+            t0 = time.perf_counter()
+            g_local = _compact_subgraph(src, dst, bipartite)
+            cont, cat = call_with_optional_kwargs(
+                self.aligner.align, g_local, cont, cat, rng, batch=b)
+            dt_align = time.perf_counter() - t0
+        with self._lock:
+            self.feat_s += dt_feat
+            self.align_s += dt_align
+        return cont, cat
+
+
+def _compact_subgraph(src: np.ndarray, dst: np.ndarray,
+                      bipartite: bool) -> Graph:
+    """Remap a shard's global ids onto a dense local id space (≤ 2E nodes)
+    so per-node structural features stay shard-sized."""
+    if bipartite:
+        su, si = np.unique(src, return_inverse=True)
+        du, di = np.unique(dst, return_inverse=True)
+        return Graph(si.astype(np.int32), di.astype(np.int32),
+                     len(su), len(du), bipartite=True)
+    ids = np.unique(np.concatenate([src, dst]))
+    si = np.searchsorted(ids, src).astype(np.int32)
+    di = np.searchsorted(ids, dst).astype(np.int32)
+    return Graph(si, di, len(ids), len(ids), bipartite=False)
+
+
+class ShardSource:
+    """Contract: ``generate(rec)`` → ``{"src": ..., "dst": ...}``, a pure
+    function of the construction arguments and ``rec.shard_id`` /
+    ``rec.chunk_indices``.  Single-threaded: the executor calls it from
+    its struct stage only."""
+
+    name = "base"
+
+    def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
+        raise NotImplementedError
+
+
+class ChunkShardSource(ShardSource):
+    """θ-weighted prefix-chunk sampling through the engine backend."""
+
+    name = "chunks"
+
+    def __init__(self, scheduler: ChunkScheduler, backend: str,
+                 dtype, double_buffered: bool = True):
+        self.scheduler = scheduler
+        self.fit: KroneckerFit = scheduler.fit
+        self.backend = backend
+        self.dtype = np.dtype(dtype)
+        self.double_buffered = double_buffered
+
+    def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
+        """Double-buffered chunk loop into a preallocated shard buffer.
+
+        Wide (int64) ids dispatch the backend's device-resident
+        ``(hi, lo)`` id words and combine them host-side in ``flush`` —
+        combining inside dispatch would force a device sync per chunk
+        and silently serialize the double-buffered pump."""
+        sched = self.scheduler
+        np_dtype = self.dtype
+        src_buf = np.empty(rec.n_edges, np_dtype)
+        dst_buf = np.empty(rec.n_edges, np_dtype)
+        chunks = [sched.chunk(i) for i in rec.chunk_indices]
+        offsets = dict(zip(rec.chunk_indices,
+                           np.cumsum([0] + [c.n_edges for c in chunks])))
+        wide = np_dtype.itemsize > 4
+        if wide:
+            be = get_backend(self.backend)
+            suffix = np.asarray(sched.thetas)[sched.k_pref:]
+            n_s = self.fit.n - sched.k_pref
+            m_s = self.fit.m - sched.k_pref
+
+        def dispatch(ck):
+            if wide:
+                return be.sample_parts(sched.key_for(ck), suffix,
+                                       n_s, m_s, ck.n_edges)
+            return rmat.sample_chunk(sched.key_for(ck), self.fit, ck,
+                                     sched.k_pref, sched.thetas,
+                                     dtype=np_dtype,
+                                     backend=self.backend)
+
+        def flush(ck, host):
+            off = offsets[ck.index]
+            if wide:
+                sparts, dparts = host   # backend may pad past ck.n_edges
+                s = combine_ids(sparts, n_s, np_dtype,
+                                prefix=ck.src_prefix)[: ck.n_edges]
+                d = combine_ids(dparts, m_s, np_dtype,
+                                prefix=ck.dst_prefix)[: ck.n_edges]
+            else:
+                s, d = host
+            src_buf[off: off + ck.n_edges] = s
+            dst_buf[off: off + ck.n_edges] = d
+
+        pump_chunks(chunks, dispatch, flush,
+                    double_buffered=self.double_buffered)
+        return {"src": src_buf, "dst": dst_buf}
+
+
+class DeviceStepShardSource(ShardSource):
+    """One mesh-wide ``device_generate`` step == one shard; the step index
+    (== shard id) seeds the per-device streams, so any step can be
+    regenerated in isolation."""
+
+    name = "device_steps"
+
+    def __init__(self, fit: KroneckerFit, thetas: np.ndarray,
+                 shard_edges: int, seed: int, dtype):
+        self.fit = fit
+        self.thetas = np.asarray(thetas)
+        self.shard_edges = int(shard_edges)
+        self.seed = int(seed)
+        self.dtype = np.dtype(dtype)
+        self._step = None
+
+    def _setup(self):
+        """Build the mesh + jitted step function once per source: every
+        step shares shapes, so the shard_map trace/compile is paid a
+        single time and steps differ only in their seed vector."""
+        if self._step is None:
+            from jax.sharding import Mesh
+
+            from repro.core.distributed_gen import device_generate
+
+            mesh = Mesh(np.array(jax.devices()), ("d",))
+            n_dev = mesh.size
+            k_dev = int(np.log2(n_dev))
+            if 2 ** k_dev != n_dev:
+                raise ValueError(
+                    f"device count {n_dev} must be a power of two")
+            n_loc = self.fit.n - k_dev
+            epd = math.ceil(self.shard_edges / n_dev)
+            # full θ rows: the shared descend runs max(n_loc, m) levels
+            # (dst keeps all m levels; only src loses k_dev to the device
+            # prefix), so offsetting rows by k_dev would both starve the
+            # last k_dev dst levels and misalign the square levels.
+            thetas = jnp.asarray(self.thetas, jnp.float32)
+
+            @jax.jit
+            def step(seeds):
+                return device_generate(thetas, seeds, n_loc, self.fit.m,
+                                       epd, mesh, dtype=self.dtype)
+
+            self._step = (step, n_dev)
+        return self._step
+
+    def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
+        from repro.core.distributed_gen import step_seeds
+
+        step, n_dev = self._setup()
+        seeds = step_seeds(self.seed, rec.shard_id, n_dev)
+        src, dst = step(jnp.asarray(seeds))
+        src = np.asarray(jax.device_get(src)).reshape(-1)
+        dst = np.asarray(jax.device_get(dst)).reshape(-1)
+        return {"src": src[: rec.n_edges], "dst": dst[: rec.n_edges]}

@@ -25,6 +25,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import queue
+import threading
+import time
 import zlib
 from typing import Callable, Dict, Iterable, List, Optional
 
@@ -35,9 +38,28 @@ MANIFEST_NAME = "manifest.json"
 JOURNAL_NAME = "progress.jsonl"
 FORMAT_VERSION = 1
 
+#: block size (rows) for streamed CRC of on-disk shards — deep verify
+#: touches one block at a time, so re-hashing a >RAM dataset stays
+#: bounded-memory.  crc32 chains across consecutive blocks, so the
+#: streamed digest is bit-identical to the one-shot digest.
+CRC_BLOCK_ROWS = 1 << 20
+
 
 def _crc32(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _crc32_stream(arr: np.ndarray,
+                  block_rows: Optional[int] = None) -> int:
+    """crc32 of ``arr`` computed ``block_rows`` rows at a time.  For a
+    memory-mapped array only one block is ever resident, so deep verify
+    of arbitrarily large shards never materializes a full column."""
+    block = block_rows or CRC_BLOCK_ROWS
+    crc = 0
+    for i in range(0, max(len(arr), 1), block):
+        chunk = np.ascontiguousarray(arr[i: i + block])
+        crc = zlib.crc32(chunk.tobytes(), crc)
+    return crc & 0xFFFFFFFF
 
 
 def _atomic_write_bytes(path: str, data: bytes) -> None:
@@ -102,6 +124,10 @@ class Manifest:
     n_dev: Optional[int] = None         # device_steps: mesh size the
                                         # step seeds/shapes depend on
     features: Optional[dict] = None     # {"n_cont": int, "cat_cards": [...]}
+    executor: Optional[dict] = None     # {"pipeline_depth", "host_workers"}
+                                        # — provenance only: the executor
+                                        # is byte-transparent, so resume
+                                        # does NOT validate these knobs
     shards: List[ShardRecord] = dataclasses.field(default_factory=list)
     version: int = FORMAT_VERSION
 
@@ -229,7 +255,10 @@ class ShardWriter:
 
     def shard_ok_on_disk(self, rec: ShardRecord, deep: bool = False) -> bool:
         """Cheap (existence + row count) or deep (crc32) check of a shard
-        previously marked done — used before skipping it on resume."""
+        previously marked done — used before skipping it on resume.  The
+        deep CRC streams the memory-mapped column in blocks
+        (``CRC_BLOCK_ROWS``), so deep-verifying a >RAM dataset never
+        materializes a full shard."""
         if rec.status != "done" or not rec.files:
             return False
         for col, fname in rec.files.items():
@@ -242,9 +271,74 @@ class ShardWriter:
                 return False
             if arr.shape[0] != rec.n_edges:
                 return False
-            if deep and _crc32(np.asarray(arr)) != rec.crc32.get(col):
+            if deep and _crc32_stream(arr) != rec.crc32.get(col):
                 return False
         return True
+
+    def async_flush(self, depth: int = 2) -> "AsyncFlushQueue":
+        """A bounded in-order write queue on a dedicated flush thread —
+        the executor's IO stage.  Ordering/journal/checkpoint behaviour
+        is exactly ``write_shard`` called serially in submission order."""
+        return AsyncFlushQueue(self, depth)
+
+
+class AsyncFlushQueue:
+    """Single-threaded, in-order, bounded shard flush.
+
+    ``submit`` blocks when ``depth`` shards are already queued
+    (backpressure); the flush thread runs ``writer.write_shard`` in FIFO
+    order, so journal appends and manifest compaction points are
+    identical to the serial loop.  After a write failure the queue stops
+    writing (later shards are drained unwritten — the journal stays a
+    clean prefix) and ``submit``/``close`` re-raise the error.
+    ``busy_s`` accumulates write-stage busy time for overlap reporting.
+    """
+
+    def __init__(self, writer: "ShardWriter", depth: int = 2):
+        self.writer = writer
+        self.busy_s = 0.0
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(depth)))
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop,
+                                        name="shard-flush", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                if self._err is not None:
+                    continue        # drain, but keep the journal a prefix
+                shard_id, arrays = item
+                t0 = time.perf_counter()
+                try:
+                    self.writer.write_shard(shard_id, arrays)
+                except BaseException as e:   # noqa: BLE001 — carried over
+                    self._err = e
+                finally:
+                    self.busy_s += time.perf_counter() - t0
+            finally:
+                self._q.task_done()
+
+    def submit(self, shard_id: int, arrays: Dict[str, np.ndarray]) -> None:
+        if self._err is not None:
+            raise RuntimeError(
+                f"shard flush thread failed on an earlier shard: "
+                f"{self._err!r}") from self._err
+        self._q.put((shard_id, arrays))
+
+    def close(self) -> None:
+        """Drain the queue, join the flush thread, re-raise any write
+        error.  Idempotent."""
+        if self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError(
+                f"shard flush failed: {err!r}") from err
 
 
 def pump_chunks(work: Iterable, dispatch: Callable, flush: Callable,

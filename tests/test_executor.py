@@ -1,0 +1,211 @@
+"""ShardExecutor / AsyncFlushQueue unit tests against fake sources and
+feature stages: in-order commits under out-of-order host completion,
+queue-depth backpressure, prefix-only journaling on stage failures, and
+stage accounting — independent of any real generation mode."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.datastream import (ExecutorStats, Manifest, ShardExecutor,
+                              ShardRecord, ShardSource, ShardWriter)
+from repro.datastream.writer import JOURNAL_NAME
+
+
+def _manifest(n_shards, n_edges=16):
+    recs = [ShardRecord(i, f"shard-{i:05d}", [], n_edges)
+            for i in range(n_shards)]
+    return Manifest(fit={}, seed=0, k_pref=0, shard_edges=n_edges,
+                    num_workers=1, dtype="int32", total_edges=n_shards * n_edges,
+                    n_src=1 << 20, n_dst=1 << 20, bipartite=False,
+                    theta=[], theta_digest="", shards=recs)
+
+
+class FakeSource(ShardSource):
+    """src/dst = shard_id everywhere — trivially pure per shard."""
+
+    name = "fake"
+
+    def __init__(self, n_edges=16, delay=0.0):
+        self.n_edges = n_edges
+        self.delay = delay
+        self.generated = []
+
+    def generate(self, rec):
+        if self.delay:
+            time.sleep(self.delay)
+        self.generated.append(rec.shard_id)
+        ids = np.full(rec.n_edges, rec.shard_id, np.int32)
+        return {"src": ids, "dst": ids.copy()}
+
+
+class StubFeatures:
+    """FeatureSpec-shaped stub with a per-shard delay schedule (to force
+    out-of-order completion) or an injected failure."""
+
+    def __init__(self, delays=None, fail_on=None):
+        self.delays = delays or {}
+        self.fail_on = fail_on
+        self.feat_s = 0.0
+        self.align_s = 0.0
+        self._lock = threading.Lock()
+
+    def sample_for_shard(self, seed, shard_id, src, dst, bipartite,
+                         batch=None):
+        time.sleep(self.delays.get(shard_id, 0.0))
+        if shard_id == self.fail_on:
+            raise RuntimeError(f"host stage failed on shard {shard_id}")
+        with self._lock:
+            self.feat_s += 0.001
+        cont = np.full((len(src), 1), float(shard_id), np.float32)
+        cat = np.zeros((len(src), 1), np.int32)
+        return cont, cat
+
+
+def _journal_ids(out_dir):
+    path = os.path.join(out_dir, JOURNAL_NAME)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(line)["shard_id"] for line in f
+                if line.strip()]
+
+
+def _run(tmp_path, n_shards=6, features=None, depth=2, workers=2,
+         source=None, writer_kw=None):
+    out = str(tmp_path / "out")
+    manifest = _manifest(n_shards)
+    writer = ShardWriter(out, manifest, **(writer_kw or {}))
+    source = source or FakeSource()
+    ex = ShardExecutor(source, writer, features=features,
+                       pipeline_depth=depth, host_workers=workers)
+    stats = ex.run(manifest.shards)
+    return out, manifest, stats, source
+
+
+def test_commits_stay_in_order_despite_out_of_order_features(tmp_path):
+    # shard 0 is the slowest host task: with 2 workers, shards 1..3
+    # finish features first, but the journal must still read 0,1,2,...
+    feats = StubFeatures(delays={0: 0.2})
+    out, manifest, stats, _ = _run(tmp_path, n_shards=6, features=feats,
+                                   depth=4, workers=2)
+    assert _journal_ids(out) == list(range(6))
+    assert manifest.is_complete()
+    assert stats.n_shards == 6
+    blk = np.load(os.path.join(out, manifest.shards[3].files["cont"]))
+    assert blk[0, 0] == 3.0
+
+
+def test_pipeline_depth_bounds_in_flight_shards(tmp_path):
+    """Backpressure: with a slow writer, the struct stage may run at most
+    ``depth`` (inter-stage) + ``depth`` (write queue) + 1 (in flush)
+    shards ahead of the last committed write."""
+    out = str(tmp_path / "out")
+    manifest = _manifest(12)
+    writer = ShardWriter(out, manifest)
+    lead = []
+    orig = writer.write_shard
+
+    def slow_write(shard_id, arrays):
+        time.sleep(0.03)
+        lead.append(len(src.generated) - shard_id)
+        return orig(shard_id, arrays)
+
+    writer.write_shard = slow_write
+    src = FakeSource()
+    depth = 2
+    ex = ShardExecutor(src, writer, pipeline_depth=depth, host_workers=1)
+    ex.run(manifest.shards)
+    assert manifest.is_complete()
+    assert max(lead) <= 2 * depth + 2
+
+
+def test_host_stage_failure_leaves_clean_prefix(tmp_path):
+    feats = StubFeatures(fail_on=3)
+    out = str(tmp_path / "out")
+    manifest = _manifest(8)
+    writer = ShardWriter(out, manifest)
+    ex = ShardExecutor(FakeSource(), writer, features=feats,
+                       pipeline_depth=2, host_workers=2)
+    with pytest.raises(RuntimeError, match="shard 3"):
+        ex.run(manifest.shards)
+    done = _journal_ids(out)
+    assert done == list(range(len(done)))        # contiguous prefix
+    assert 3 not in done and len(done) <= 3
+    # every journaled shard has its files fully on disk
+    for sid in done:
+        assert writer.shard_ok_on_disk(manifest.shards[sid], deep=True)
+
+
+def test_write_stage_failure_propagates_and_stops(tmp_path):
+    out = str(tmp_path / "out")
+    manifest = _manifest(8)
+    writer = ShardWriter(out, manifest)
+    orig = writer.write_shard
+
+    def bad_write(shard_id, arrays):
+        if shard_id == 2:
+            raise OSError("disk full")
+        return orig(shard_id, arrays)
+
+    writer.write_shard = bad_write
+    ex = ShardExecutor(FakeSource(), writer, pipeline_depth=2)
+    with pytest.raises(RuntimeError, match="disk full"):
+        ex.run(manifest.shards)
+    assert _journal_ids(out) == [0, 1]           # nothing after the failure
+
+
+def test_serial_depth_zero_matches_pipelined_bytes(tmp_path):
+    import hashlib
+    feats_a, feats_b = StubFeatures(), StubFeatures(delays={1: 0.05})
+    out_a, _, _, _ = _run(tmp_path / "a", features=feats_a, depth=0,
+                          workers=1)
+    out_b, _, _, _ = _run(tmp_path / "b", features=feats_b, depth=3,
+                          workers=2)
+    h = lambda d: {f: hashlib.md5(open(os.path.join(d, f), "rb").read())
+                   .hexdigest()
+                   for f in sorted(os.listdir(d)) if f.endswith(".npy")}
+    assert h(out_a) == h(out_b)
+
+
+def test_stats_account_all_stages(tmp_path):
+    feats = StubFeatures()
+    _, _, stats, _ = _run(tmp_path, features=feats, depth=2, workers=2)
+    assert isinstance(stats, ExecutorStats)
+    assert stats.n_shards == 6
+    assert stats.wall_s > 0 and stats.write_s > 0
+    assert stats.feat_s == pytest.approx(feats.feat_s)
+    assert stats.busy_s == pytest.approx(stats.struct_s + stats.feat_s
+                                         + stats.align_s + stats.write_s)
+    assert stats.overlap == pytest.approx(stats.busy_s / stats.wall_s)
+
+
+def test_invalid_executor_config():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ShardExecutor(FakeSource(), None, pipeline_depth=-1)
+    with pytest.raises(ValueError, match="host_workers"):
+        ShardExecutor(FakeSource(), None, host_workers=0)
+
+
+def test_async_flush_queue_direct(tmp_path):
+    out = str(tmp_path / "out")
+    manifest = _manifest(3, n_edges=4)
+    writer = ShardWriter(out, manifest)
+    q = writer.async_flush(depth=1)
+    ids = np.zeros(4, np.int32)
+    q.submit(0, {"src": ids, "dst": ids})
+    q.submit(1, {"src": ids, "dst": ids})
+    q.close()
+    assert _journal_ids(out) == [0, 1]
+    # a bad write surfaces on the next submit or close
+    q2 = writer.async_flush(depth=1)
+    q2.submit(2, {"src": ids[:1], "dst": ids[:1]})   # wrong row count
+    with pytest.raises(RuntimeError, match="flush"):
+        for _ in range(50):
+            q2.submit(2, {"src": ids, "dst": ids})
+            time.sleep(0.01)
+    with pytest.raises(RuntimeError):
+        q2.close()
