@@ -1,0 +1,134 @@
+"""Streaming fit engine throughput: rows/s of the streamed fit
+(accumulators over a sharded dataset) vs the in-memory fit on the same
+edges, plus per-accumulator rates.  Writes
+``results/bench/BENCH_fit.json``.
+
+    PYTHONPATH=src:. python benchmarks/fit_throughput.py          # fast
+    PYTHONPATH=src:. python benchmarks/fit_throughput.py --full   # 2^21
+    PYTHONPATH=src:. python benchmarks/fit_throughput.py --smoke  # CI alias
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+OUT_DIR = "results/bench"
+
+
+def _fit(E: int):
+    from repro.core.structure import KroneckerFit
+    n = max(8, math.ceil(math.log2(max(E // 8, 16))))
+    return KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=n, m=n, E=E)
+
+
+def _dataset(tmp: str, E: int, shard_edges: int) -> str:
+    from repro.datastream import DatasetJob
+    out = os.path.join(tmp, "ds")
+    DatasetJob(_fit(E), out, shard_edges=shard_edges,
+               backend="xla").run()
+    return out
+
+
+def _time(fn, reps: int):
+    ts = []
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+def run(fast: bool = True) -> dict:
+    import jax
+
+    from repro.core import fit_engine as fe
+    from repro.core.structure import fit_structure
+    from repro.datastream import DatasetFitSource, ShardedGraphDataset
+
+    E = 1 << 18 if fast else 1 << 21
+    shard_edges = 1 << 16 if fast else 1 << 19
+    chunk_rows = shard_edges
+    reps = 3 if fast else 2
+    tmp = tempfile.mkdtemp(prefix="bench-fit-")
+    res = {"rows": E, "shard_edges": shard_edges,
+           "device": jax.default_backend()}
+    try:
+        out = _dataset(tmp, E, shard_edges)
+        ds = ShardedGraphDataset(out)
+        g = ds.to_graph()
+        src, dst = np.asarray(g.src), np.asarray(g.dst)
+
+        # streamed fit: one accumulator pass + θ-fit from the stats
+        def streamed():
+            s = DatasetFitSource(out, chunk_rows=chunk_rows)
+            stats = fe.accumulate(s, sample_rows=10_000)
+            return fe.fit_structure_streamed(stats, calibrate=False)[0]
+
+        # in-memory fit on the materialized graph (historical path)
+        def in_memory():
+            return fit_structure(g, calibrate=False)
+
+        t_s, fit_s = _time(streamed, reps)
+        t_m, fit_m = _time(in_memory, reps)
+        res["streamed_fit"] = {"seconds": round(t_s, 3),
+                               "rows_per_s": round(E / t_s)}
+        res["inmemory_fit"] = {"seconds": round(t_m, 3),
+                               "rows_per_s": round(E / t_m)}
+        res["theta_delta"] = round(max(
+            abs(fit_s.a - fit_m.a), abs(fit_s.b - fit_m.b),
+            abs(fit_s.c - fit_m.c), abs(fit_s.d - fit_m.d)), 6)
+        res["slowdown"] = round(t_s / t_m, 2)
+
+        # per-accumulator rates on in-memory arrays (no IO in the loop)
+        n = m = _fit(E).n
+        t, _ = _time(lambda: fe.BitPairMLE(n, m).update(src, dst), reps)
+        res["bitpair_mle"] = {"seconds": round(t, 3),
+                              "rows_per_s": round(E / t)}
+        t, _ = _time(lambda: fe.DegreeSketch(1 << n, 2048)
+                     .update(src).finalize(), reps)
+        res["degree_sketch"] = {"seconds": round(t, 3),
+                                "rows_per_s": round(E / t)}
+        chunk = fe.FitChunk(src, dst, None, None, 0)
+        t, _ = _time(lambda: fe.ReservoirSample(10_000)
+                     .update(chunk).finalize(), reps)
+        res["reservoir"] = {"seconds": round(t, 3),
+                            "rows_per_s": round(E / t)}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "BENCH_fit.json"), "w") as f:
+        json.dump(res, f, indent=2)
+    for k in ("streamed_fit", "inmemory_fit", "bitpair_mle",
+              "degree_sketch", "reservoir"):
+        print(f"fit/{k},{res[k]['seconds'] * 1e6:.0f},"
+              f"{res[k]['rows_per_s']}")
+    print(f"# streamed vs in-memory: {res['slowdown']}x slower, "
+          f"theta delta {res['theta_delta']}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sizes (the default; kept as an explicit "
+                         "flag so CI invocations read as smoke runs)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (2^21 rows)")
+    args = ap.parse_args()
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
+    run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ TABLES = [
     "datastream_throughput",
     "feature_throughput",
     "executor_overlap",
+    "fit_throughput",
 ]
 
 

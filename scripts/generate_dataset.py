@@ -20,12 +20,11 @@ import time
 
 
 def parse_count(s: str) -> int:
-    """'1e7', '10_000', '1<<20' style edge counts."""
-    s = s.replace("_", "")
-    if "<<" in s:
-        a, b = s.split("<<")
-        return int(a) << int(b)
-    return int(float(s))
+    """'1e7', '10_000', '1<<20' style edge counts (repro.utils is the
+    canonical implementation; imported lazily so ``--help`` works
+    without PYTHONPATH)."""
+    from repro.utils import parse_count as _parse_count
+    return _parse_count(s)
 
 
 def build_fit(args):
@@ -40,6 +39,9 @@ def build_fit(args):
                             noise=args.noise)
     with open(args.fit) as f:
         d = json.load(f)
+    if isinstance(d.get("fit"), dict):
+        # fit_dataset.py output: KroneckerFit under "fit" + provenance
+        d = d["fit"]
     fit = KroneckerFit(**d)
     if E is not None:
         fit = dataclasses.replace(fit, E=E)
@@ -52,7 +54,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--fit", default="demo",
-                    help="'demo' or path to a KroneckerFit JSON")
+                    help="'demo', a KroneckerFit JSON, or a "
+                         "fit_dataset.py output (fit + provenance)")
     ap.add_argument("--edges", default=None,
                     help="total edge count E, e.g. 1e7 (overrides fit.E)")
     ap.add_argument("--shard-edges", default="1e6",

@@ -51,6 +51,40 @@ def degree_dist_similarity(g_real: Graph, g_syn: Graph,
     return float(np.mean(sims))
 
 
+def _normalized_log_hist_counts(counts: np.ndarray, max_deg: int,
+                                n_bins: int = 24) -> np.ndarray:
+    """``_normalized_log_hist`` evaluated from a degree *histogram*
+    (``counts[k]`` = #nodes with degree k) instead of the raw degree
+    array — the form the streaming degree sketch produces.  Degrees
+    clipped into the sketch's last bin sit at ``kmax / max_deg``."""
+    counts = np.asarray(counts, np.float64)
+    ks = np.arange(len(counts), dtype=np.float64)
+    w = counts.copy()
+    w[0] = 0.0                                  # d > 0 filter
+    if w.sum() <= 0 or max_deg <= 0:
+        return np.zeros(n_bins)
+    x = np.clip(ks / max_deg, 1e-6, 1.0)
+    edges = np.logspace(-6, 0, n_bins + 1)
+    h, _ = np.histogram(x, bins=edges, weights=w)
+    return h / max(h.sum(), 1)
+
+
+def degree_counts_similarity(out_a, max_out_a: int, in_a, max_in_a: int,
+                             out_b, max_out_b: int, in_b, max_in_b: int,
+                             n_bins: int = 24) -> float:
+    """``degree_dist_similarity`` between two degree-histogram pairs —
+    lets the streamed fit path (and >RAM dataset evaluation) score degree
+    agreement from bounded-memory sketches, never touching a dense
+    per-node array."""
+    sims = []
+    for ha, ma, hb, mb in ((out_a, max_out_a, out_b, max_out_b),
+                           (in_a, max_in_a, in_b, max_in_b)):
+        h1 = _normalized_log_hist_counts(ha, ma, n_bins)
+        h2 = _normalized_log_hist_counts(hb, mb, n_bins)
+        sims.append(1.0 - 0.5 * np.abs(h1 - h2).sum())
+    return float(np.mean(sims))
+
+
 def dcc(g_real: Graph, g_syn: Graph, n_points: int = 16) -> float:
     """Paper Eq. 20: mean relative error of the normalized degree
     distribution at log-spaced normalized degrees.  0 = identical."""
@@ -86,19 +120,36 @@ def pearson_matrix(cont: np.ndarray) -> np.ndarray:
 
 
 def correlation_ratio(cat: np.ndarray, cont: np.ndarray) -> float:
-    """η: sqrt(SS_between / SS_total) for one cat vs one cont column."""
+    """η: sqrt(SS_between / SS_total) for one cat vs one cont column.
+
+    Empty columns (no rows) and constant/degenerate continuous columns
+    return 0.0 — ``np.var`` of an empty slice is NaN, and a NaN here
+    would poison the whole ``feature_correlation_score`` mean."""
+    cat = np.asarray(cat)
+    cont = np.asarray(cont, np.float64)
+    if cont.size == 0 or cat.size == 0:
+        return 0.0
     total_var = cont.var() * len(cont)
-    if total_var <= 0:
+    if not np.isfinite(total_var) or total_var <= 0:
         return 0.0
     ss_between = 0.0
     for c in np.unique(cat):
         grp = cont[cat == c]
         ss_between += len(grp) * (grp.mean() - cont.mean()) ** 2
-    return float(np.sqrt(ss_between / total_var))
+    return float(min(np.sqrt(ss_between / total_var), 1.0))
 
 
 def theils_u(x: np.ndarray, y: np.ndarray) -> float:
-    """U(x|y) = (H(x) − H(x|y)) / H(x) ∈ [0,1]."""
+    """U(x|y) = (H(x) − H(x|y)) / H(x) ∈ [0,1].
+
+    Empty columns return 0.0 (an empty count vector would make the
+    entropy 0/0 = NaN); constant ``x`` keeps its defined value 1.0
+    (H(x) = 0: knowing y "explains" all of the zero entropy)."""
+    x = np.asarray(x)
+    y = np.asarray(y)
+    if x.size == 0 or y.size == 0:
+        return 0.0
+
     def entropy(v):
         _, c = np.unique(v, return_counts=True)
         p = c / c.sum()
@@ -197,13 +248,29 @@ def degree_feature_distance(g_real: Graph, feat_real: np.ndarray,
 
 
 def evaluate_all(g_real: Graph, cont_r, cat_r, g_syn: Graph, cont_s, cat_s
-                 ) -> Dict[str, float]:
-    feat_r = cont_r[:, 0] if cont_r.size else cat_r[:, 0].astype(np.float64)
-    feat_s = cont_s[:, 0] if cont_s.size else cat_s[:, 0].astype(np.float64)
-    return {
+                 ) -> Dict[str, Optional[float]]:
+    """All paper metrics for one (real, synthetic) pair.  Structure-only
+    pipelines (zero continuous AND zero categorical columns) have no
+    feature terms: those keys are returned as ``None`` (absent) instead
+    of indexing into an empty column block and crashing."""
+    out: Dict[str, Optional[float]] = {
         "degree_dist": degree_dist_similarity(g_real, g_syn),
         "dcc": dcc(g_real, g_syn),
-        "feature_corr": feature_correlation_score(cont_r, cat_r, cont_s, cat_s),
-        "degree_feat_dist": degree_feature_distance(
-            g_real, feat_r, g_syn, feat_s),
     }
+    n_cols_r = cont_r.shape[1] + cat_r.shape[1]
+    n_cols_s = cont_s.shape[1] + cat_s.shape[1]
+    if n_cols_r == 0 or n_cols_s == 0:
+        out["feature_corr"] = None
+        out["degree_feat_dist"] = None
+        return out
+    # select by column presence, not .size — a zero-ROW table with
+    # continuous columns must not fall through to the cat branch
+    feat_r = (cont_r[:, 0] if cont_r.shape[1]
+              else cat_r[:, 0].astype(np.float64))
+    feat_s = (cont_s[:, 0] if cont_s.shape[1]
+              else cat_s[:, 0].astype(np.float64))
+    out["feature_corr"] = feature_correlation_score(cont_r, cat_r,
+                                                    cont_s, cat_s)
+    out["degree_feat_dist"] = degree_feature_distance(
+        g_real, feat_r, g_syn, feat_s)
+    return out

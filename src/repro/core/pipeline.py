@@ -92,6 +92,84 @@ class SyntheticGraphPipeline:
         self._g_ref = g
         return self
 
+    # -- fit from a sharded stream (repro.core.fit_engine) -----------------
+    def fit_streamed(self, source, sample_rows: int = 100_000,
+                     chunk_rows: int = 1 << 20, kmax: int = 2048,
+                     seed: int = 0, calibrate: bool = True,
+                     stratified: bool = False
+                     ) -> "SyntheticGraphPipeline":
+        """Fit every pipeline component from a chunked ``(src, dst,
+        cont, cat)`` stream — a ``repro.datastream`` dataset directory,
+        a ``ShardedGraphDataset``, a ``FitSource``, or in-memory arrays
+        — without ever holding the graph or feature matrix in RAM.
+        Closes the fit → generate → refit loop: a dataset produced by
+        :meth:`generate_streamed` can be re-fit directly from its
+        manifest.
+
+        Structure: one-pass accumulators (jit-batched bit-pair MLE +
+        bounded-memory degree sketches) feed the same MLE → Eq. 6 →
+        calibration ladder as :func:`repro.core.structure.fit_structure`;
+        wide int64 id spaces fit without jax x64.  Features/aligner: the
+        existing VGM/GAN/GBDT fits run on an order-invariant
+        ``sample_rows``-row priority sample (``stratified=True`` caps
+        each chunk's share); the aligner trains against the id-compacted
+        sample subgraph — the same bounded-memory approximation the
+        streamed generation path aligns with.  Peak memory is bounded by
+        ``chunk_rows`` + the sample, not the dataset.
+
+        Provenance (θ candidates, sketch digests, sample identity) lands
+        in ``self.fit_provenance`` — ``fit_engine.fit_to_json(
+        pipe.struct, pipe.fit_provenance)`` is deterministic and
+        byte-identical across chunk orderings.
+        """
+        from repro.core import fit_engine
+        from repro.datastream.fitsource import as_fit_source
+        from repro.graph.ops import compact_subgraph
+
+        if self.struct_kind != "kronecker":
+            raise ValueError("streamed fitting supports the kronecker "
+                             f"structure generator, not {self.struct_kind}")
+        src_obj = as_fit_source(source, chunk_rows=chunk_rows)
+        t0 = time.time()
+        stats = fit_engine.accumulate(src_obj, sample_rows=sample_rows,
+                                      seed=seed, kmax=kmax,
+                                      stratified=stratified)
+        self.struct, self.fit_provenance = fit_engine.fit_structure_streamed(
+            stats, noise=self.noise, calibrate=calibrate)
+        self.timings.fit_struct_s = time.time() - t0
+
+        sample = stats.sample
+        n_rows = max(len(sample["rows"]), 1)
+        cont_s = (sample["cont"] if sample["cont"] is not None
+                  else np.zeros((n_rows, 0), np.float32))
+        cat_s = (sample["cat"] if sample["cat"] is not None
+                 else np.zeros((n_rows, 0), np.int32))
+        # exact cardinalities from the full pass, not the sample — a
+        # rare category missing from the sample must still be decodable
+        self.schema = TableSchema(n_cont=stats.n_cont,
+                                  cat_cards=stats.cat_cards)
+
+        t0 = time.time()
+        gen_cls = FEATURE_GENERATORS[self.feat_kind]
+        self.features = gen_cls(self.schema)
+        # zero-width tables carry nothing to learn: skip the GAN steps
+        steps = self.gan_steps if (stats.n_cont + len(stats.cat_cards)) \
+            else 0
+        self.features.fit(cont_s, cat_s, steps=steps)
+        self.timings.fit_feat_s = time.time() - t0
+
+        t0 = time.time()
+        g_local = compact_subgraph(sample["src"], sample["dst"],
+                                   stats.bipartite)
+        al_cls = ALIGNERS[self.aligner_kind]
+        self.aligner = al_cls(self.schema, kind=self.feature_kind) \
+            if self.aligner_kind == "random" else \
+            al_cls(self.schema, self.aligner_cfg, kind=self.feature_kind)
+        self.aligner.fit(g_local, cont_s, cat_s)
+        self.timings.fit_align_s = time.time() - t0
+        self._g_ref = g_local
+        return self
+
     # -- generate -------------------------------------------------------------
     def generate(self, seed: int = 0, scale_nodes: int = 1,
                  density_preserving: bool = True, chunked: bool = False,

@@ -80,18 +80,16 @@ class KroneckerFit:
 
 def estimate_ratios_mle(src, dst, n: int, m: int) -> np.ndarray:
     """Empirical bit-pair frequencies == MLE of (a,b,c,d) per level, averaged
-    over the min(n, m) square levels."""
-    src = np.asarray(src, np.int64)
-    dst = np.asarray(dst, np.int64)
-    lv = min(n, m)
-    counts = np.zeros(4, np.float64)
-    for ell in range(lv):
-        sb = (src >> (n - 1 - ell)) & 1 if ell < n else np.zeros_like(src)
-        db = (dst >> (m - 1 - ell)) & 1 if ell < m else np.zeros_like(dst)
-        joint = sb * 2 + db
-        counts += np.bincount(joint, minlength=4)
-    freq = counts / max(counts.sum(), 1)
-    return freq  # [a, b, c, d] order: (0,0),(0,1),(1,0),(1,1)
+    over the min(n, m) square levels.
+
+    Counting runs through the jit-batched ``fit_engine.BitPairMLE``
+    accumulator (one device call per block instead of the historical
+    per-level numpy loop); integer counts are identical, so the returned
+    frequencies are bit-for-bit the historical values.  Wide (int64) ids
+    are handled via the engine's (hi, lo) id-word split — no jax x64."""
+    from repro.core.fit_engine import BitPairMLE
+    return BitPairMLE(n, m).update(src, dst).ratios()
+    # [a, b, c, d] order: (0,0),(0,1),(1,0),(1,1)
 
 
 def expected_degree_hist(p: float, levels: int, E: int, kmax: int,
@@ -146,17 +144,34 @@ def fit_marginals(g: Graph, n: int, m: int, kmax: int = 2048,
                   trust: float = 0.06) -> Tuple[float, float]:
     """Minimize Eq. 6 over (p, q) with Eq. 7/8 expected histograms.
 
+    Thin wrapper: computes the observed degree histograms from an
+    in-memory graph and defers to :func:`fit_marginals_hist` — the
+    histogram form is what the streaming fit engine produces, so both
+    paths share one optimizer."""
+    obs_out = np.asarray(degree_histogram(out_degrees(g), kmax),
+                         dtype=np.float64)
+    obs_in = np.asarray(degree_histogram(in_degrees(g), kmax),
+                        dtype=np.float64)
+    return fit_marginals_hist(obs_out, obs_in, g.n_edges, n, m, kmax=kmax,
+                              anchor=anchor, trust=trust)
+
+
+def fit_marginals_hist(obs_out: np.ndarray, obs_in: np.ndarray, E: int,
+                       n: int, m: int, kmax: int = 2048,
+                       anchor: Optional[Tuple[float, float]] = None,
+                       trust: float = 0.06) -> Tuple[float, float]:
+    """Eq. 6 marginal fit from observed degree *histograms* (out/in
+    ``(kmax+1,)`` count vectors) — the whole-graph-free form consumed by
+    ``repro.core.fit_engine``.
+
     The closed-form histograms are exact only in expectation and the
     log-binned objective has shallow, slightly miscalibrated minima, so the
     refinement is anchored at the exact bit-pair-MLE marginals (when
     given) within a ±``trust`` region — Eq. 6 fine-tunes the tail shape
     without abandoning the globally-consistent MLE point."""
-    E = g.n_edges
     ks = np.arange(kmax + 1)
-    obs_out = np.asarray(degree_histogram(out_degrees(g), kmax),
-                         dtype=np.float64)
-    obs_in = np.asarray(degree_histogram(in_degrees(g), kmax),
-                        dtype=np.float64)
+    obs_out = np.asarray(obs_out, np.float64)
+    obs_in = np.asarray(obs_in, np.float64)
 
     if anchor is not None:
         lo = (max(0.05, anchor[0] - trust), max(0.05, anchor[1] - trust))
@@ -198,6 +213,52 @@ def combine(p: float, q: float, ratio_ab: float) -> Tuple[float, float, float, f
     return float(a), float(b), float(c), float(d)
 
 
+def candidate_fits(n: int, m: int, E: int, bipartite: bool, noise: float,
+                   ratios: np.ndarray, marginals_fn,
+                   calibrate: bool = True
+                   ) -> "list[Tuple[str, KroneckerFit]]":
+    """The shared candidate-θ ladder behind both fit drivers.
+
+    ``marginals_fn(anchor_or_None) -> (p, q)`` abstracts where the Eq. 6
+    refinement gets its observed histograms — the in-memory graph
+    (:func:`fit_structure`) or the streaming degree sketch
+    (``fit_engine.fit_structure_streamed``).  Returns named candidates
+    in a fixed order; the caller scores and picks."""
+    ratio_ab = ratios[0] / max(ratios[1], 1e-6)
+    anchor = (float(ratios[0] + ratios[1]), float(ratios[0] + ratios[2]))
+    p_ref, q_ref = marginals_fn(anchor)
+
+    def mk(p, q):
+        a, b, c, d = combine(p, q, ratio_ab)
+        nz = min(noise, (a + d) / 2, b, c) if noise > 0 else 0.0
+        return KroneckerFit(a=a, b=b, c=c, d=d, n=n, m=m, E=E,
+                            noise=nz, bipartite=bipartite)
+
+    cand = [("eq6_refined", mk(p_ref, q_ref))]
+    if calibrate:
+        mle = mk(anchor[0], anchor[1])
+        if abs(mle.p - p_ref) + abs(mle.q - q_ref) > 1e-3:
+            cand.append(("mle_anchor", mle))
+        # independence-factorized candidate: a=pq, b=p(1-q), c=(1-p)q,
+        # d=(1-p)(1-q) with free-range Eq.6 marginals — reaches skew levels
+        # the MLE a/b ratio forbids (needed for very heavy-tailed inputs
+        # where one node holds a large edge share)
+        p_f, q_f = marginals_fn(None)
+
+        def mk_indep(p, q):
+            a, b, c, d = p * q, p * (1 - q), (1 - p) * q, (1 - p) * (1 - q)
+            nz = (min(noise, (a + d) / 2, max(b, 1e-4), max(c, 1e-4))
+                  if noise > 0 else 0.0)
+            return KroneckerFit(a=a, b=b, c=c, d=d, n=n, m=m, E=E,
+                                noise=nz, bipartite=bipartite)
+
+        cand.append(("indep_eq6", mk_indep(p_f, q_f)))
+        # skew ladder: simulated-moment-matching over increasing tail mass
+        for p, q in ((0.84, 0.82), (0.89, 0.87), (0.93, 0.92)):
+            cand.append((f"indep_skew_{p:.2f}", mk_indep(p, q)))
+    return cand
+
+
 def fit_structure(g: Graph, noise: float = 0.0,
                   calibrate: bool = True) -> KroneckerFit:
     """Full paper fitting pipeline on an observed graph.
@@ -212,45 +273,17 @@ def fit_structure(g: Graph, noise: float = 0.0,
     n = max(1, math.ceil(math.log2(max(g.n_src, 2))))
     m = max(1, math.ceil(math.log2(max(g.n_dst, 2))))
     ratios = estimate_ratios_mle(np.asarray(g.src), np.asarray(g.dst), n, m)
-    ratio_ab = ratios[0] / max(ratios[1], 1e-6)
-    anchor = (float(ratios[0] + ratios[1]), float(ratios[0] + ratios[2]))
-    p_ref, q_ref = fit_marginals(g, n, m, anchor=anchor)
-
-    def mk(p, q):
-        a, b, c, d = combine(p, q, ratio_ab)
-        nz = min(noise, (a + d) / 2, b, c) if noise > 0 else 0.0
-        return KroneckerFit(a=a, b=b, c=c, d=d, n=n, m=m, E=g.n_edges,
-                            noise=nz, bipartite=g.bipartite)
-
-    cand = [mk(p_ref, q_ref)]
-    if calibrate:
-        mle = mk(anchor[0], anchor[1])
-        if abs(mle.p - p_ref) + abs(mle.q - q_ref) > 1e-3:
-            cand.append(mle)
-        # independence-factorized candidate: a=pq, b=p(1-q), c=(1-p)q,
-        # d=(1-p)(1-q) with free-range Eq.6 marginals — reaches skew levels
-        # the MLE a/b ratio forbids (needed for very heavy-tailed inputs
-        # where one node holds a large edge share)
-        p_f, q_f = fit_marginals(g, n, m)
-
-        def mk_indep(p, q):
-            a, b, c, d = p * q, p * (1 - q), (1 - p) * q, (1 - p) * (1 - q)
-            nz = (min(noise, (a + d) / 2, max(b, 1e-4), max(c, 1e-4))
-                  if noise > 0 else 0.0)
-            return KroneckerFit(a=a, b=b, c=c, d=d, n=n, m=m, E=g.n_edges,
-                                noise=nz, bipartite=g.bipartite)
-
-        cand.append(mk_indep(p_f, q_f))
-        # skew ladder: simulated-moment-matching over increasing tail mass
-        for p, q in ((0.84, 0.82), (0.89, 0.87), (0.93, 0.92)):
-            cand.append(mk_indep(p, q))
+    cand = candidate_fits(
+        n, m, g.n_edges, g.bipartite, noise, ratios,
+        lambda anchor: fit_marginals(g, n, m, anchor=anchor),
+        calibrate=calibrate)
     if len(cand) == 1:
-        return cand[0]
+        return cand[0][1]
 
     from repro.core import rmat as rmat_mod
     from repro.core.metrics import degree_dist_similarity
     best, best_score = None, -1.0
-    for i, fit in enumerate(cand):
+    for i, (_, fit) in enumerate(cand):
         e_cal = min(fit.E, 200_000)
         src, dst = rmat_mod.sample_graph(jax.random.PRNGKey(1234 + i), fit,
                                          n_edges=e_cal)

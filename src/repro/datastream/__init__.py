@@ -14,6 +14,10 @@ into a dataset *service*, split into focused layers:
   (byte-identical to the serial loop, which ``pipeline_depth=0`` runs)
 * ``writer``    — sharded on-disk store, journaled progress, async flush
 * ``reader``    — manifest-driven mmap-ed access + streamed deep verify
+* ``fitsource`` — ``FitSource``: chunked ``(src, dst, cont, cat)`` fit
+  streams (in-memory arrays or a materialized dataset) consumed by the
+  one-pass accumulators of ``repro.core.fit_engine`` — the read-side
+  mirror of ``ShardSource`` closing the fit → generate → refit loop
 * ``service``   — ``DatasetJob``: the resumable plan→run→verify facade
 
     from repro.datastream import DatasetJob, ShardedGraphDataset
@@ -26,6 +30,8 @@ into a dataset *service*, split into focused layers:
         train_step(block.src, block.dst, block.cont)
 """
 from repro.datastream.executor import ExecutorStats, ShardExecutor
+from repro.datastream.fitsource import (ArrayFitSource, DatasetFitSource,
+                                        FitSource, as_fit_source)
 from repro.datastream.reader import ShardBlock, ShardedGraphDataset
 from repro.datastream.scheduler import ChunkScheduler, ShardPlan, auto_k_pref
 from repro.datastream.service import DatasetJob
@@ -42,4 +48,5 @@ __all__ = [
     "ShardSource", "ChunkShardSource", "DeviceStepShardSource",
     "ShardExecutor", "ExecutorStats",
     "DatasetJob", "FeatureSpec",
+    "FitSource", "ArrayFitSource", "DatasetFitSource", "as_fit_source",
 ]

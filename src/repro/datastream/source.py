@@ -47,7 +47,7 @@ from repro.core.sampler import get_backend
 from repro.core.structure import KroneckerFit
 from repro.datastream.scheduler import ChunkScheduler
 from repro.datastream.writer import ShardRecord, pump_chunks
-from repro.graph.ops import Graph
+from repro.graph.ops import compact_subgraph
 from repro.utils import call_with_optional_kwargs
 
 _FEATURE_SALT = 0xFEA7
@@ -100,7 +100,7 @@ class FeatureSpec:
         if self.aligner is not None and len(src):
             # id compaction is part of the alignment cost
             t0 = time.perf_counter()
-            g_local = _compact_subgraph(src, dst, bipartite)
+            g_local = compact_subgraph(src, dst, bipartite)
             cont, cat = call_with_optional_kwargs(
                 self.aligner.align, g_local, cont, cat, rng, batch=b)
             dt_align = time.perf_counter() - t0
@@ -110,19 +110,10 @@ class FeatureSpec:
         return cont, cat
 
 
-def _compact_subgraph(src: np.ndarray, dst: np.ndarray,
-                      bipartite: bool) -> Graph:
-    """Remap a shard's global ids onto a dense local id space (≤ 2E nodes)
-    so per-node structural features stay shard-sized."""
-    if bipartite:
-        su, si = np.unique(src, return_inverse=True)
-        du, di = np.unique(dst, return_inverse=True)
-        return Graph(si.astype(np.int32), di.astype(np.int32),
-                     len(su), len(du), bipartite=True)
-    ids = np.unique(np.concatenate([src, dst]))
-    si = np.searchsorted(ids, src).astype(np.int32)
-    di = np.searchsorted(ids, dst).astype(np.int32)
-    return Graph(si, di, len(ids), len(ids), bipartite=False)
+# NOTE: the shard-local id compaction moved to
+# ``repro.graph.ops.compact_subgraph`` — the streamed fit path reuses it
+# for sample subgraphs, so it is graph substrate, not datastream
+# plumbing.
 
 
 class ShardSource:

@@ -34,11 +34,29 @@ class Graph:
         return self.n_src + self.n_dst if self.bipartite else self.n_src
 
 
+#: dense-degree guard: ``in_degrees``/``out_degrees`` materialize one
+#: counter per node, so a 2^34-node graph would ask ``jnp.bincount`` for
+#: a multi-GiB array.  Beyond this many nodes the dense path raises and
+#: points at the bounded-memory streaming sketch instead of OOMing.
+MAX_DENSE_DEGREE_NODES = 1 << 27
+
+
+def _check_dense_degrees(n: int, what: str) -> None:
+    if n > MAX_DENSE_DEGREE_NODES:
+        raise ValueError(
+            f"{what}: dense degree array over {n:,} nodes exceeds the "
+            f"{MAX_DENSE_DEGREE_NODES:,}-node guard — use the streaming "
+            "degree sketch (repro.core.fit_engine.DegreeSketch / "
+            "sparse_degree_histogram) for graphs this large")
+
+
 def out_degrees(g: Graph) -> jnp.ndarray:
+    _check_dense_degrees(g.n_src, "out_degrees")
     return jnp.bincount(g.src, length=g.n_src)
 
 
 def in_degrees(g: Graph) -> jnp.ndarray:
+    _check_dense_degrees(g.n_dst, "in_degrees")
     return jnp.bincount(g.dst, length=g.n_dst)
 
 
@@ -46,7 +64,40 @@ def degree_histogram(degrees, max_deg: Optional[int] = None) -> jnp.ndarray:
     """c_k = #nodes with degree k (k=0..max_deg)."""
     if max_deg is None:
         max_deg = int(jnp.max(degrees)) if degrees.size else 0
+    _check_dense_degrees(max_deg + 1, "degree_histogram")
     return jnp.bincount(jnp.clip(degrees, 0, max_deg), length=max_deg + 1)
+
+
+def sparse_degree_histogram(ids, n_nodes: int, kmax: int
+                            ) -> Tuple[np.ndarray, int]:
+    """``(histogram, max_degree)`` of the degree sequence behind ``ids``
+    without a dense per-node array: unique-count is O(E log E) in the
+    edge count and independent of ``n_nodes``, so it works at id spaces
+    where ``in_degrees``/``out_degrees`` would OOM.  Degrees above
+    ``kmax`` are clipped into the last bin (the ``degree_histogram``
+    convention); zero-degree nodes land in bin 0."""
+    _, cnt = np.unique(np.asarray(ids), return_counts=True)
+    hist = np.bincount(np.minimum(cnt, kmax),
+                       minlength=kmax + 1).astype(np.int64)
+    hist[0] += int(n_nodes) - len(cnt)
+    return hist, int(cnt.max()) if len(cnt) else 0
+
+
+def compact_subgraph(src: np.ndarray, dst: np.ndarray,
+                     bipartite: bool) -> Graph:
+    """Remap a sample's global ids onto a dense local id space (≤ 2E
+    nodes) so per-node structural features stay sample-sized."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if bipartite:
+        su, si = np.unique(src, return_inverse=True)
+        du, di = np.unique(dst, return_inverse=True)
+        return Graph(si.astype(np.int32), di.astype(np.int32),
+                     len(su), len(du), bipartite=True)
+    ids = np.unique(np.concatenate([src, dst]))
+    si = np.searchsorted(ids, src).astype(np.int32)
+    di = np.searchsorted(ids, dst).astype(np.int32)
+    return Graph(si, di, len(ids), len(ids), bipartite=False)
 
 
 def dedup_edges(src, dst, n_dst: int):

@@ -7,6 +7,17 @@ import jax
 import jax.numpy as jnp
 
 
+def parse_count(s: str) -> int:
+    """'1e7', '10_000', '1<<20' style counts — the CLI edge/row-count
+    grammar shared by scripts/generate_dataset.py and
+    scripts/fit_dataset.py."""
+    s = s.replace("_", "")
+    if "<<" in s:
+        a, b = s.split("<<")
+        return int(a) << int(b)
+    return int(float(s))
+
+
 def accepts_kwarg(fn, name: str) -> bool:
     """True when ``fn`` can be called with keyword ``name`` — used to
     thread optional engine kwargs (e.g. ``batch=``) through pluggable

@@ -1,0 +1,486 @@
+"""Streaming fit engine: accumulator exactness + chunk-order invariance,
+wide-id fits, the dense-degree guards, fit_streamed round trips and the
+fit_dataset.py CLI."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fit_engine as fe
+from repro.core import rmat
+from repro.core.structure import KroneckerFit, estimate_ratios_mle
+from repro.datastream.fitsource import (ArrayFitSource, DatasetFitSource,
+                                        as_fit_source)
+from repro.graph.ops import (Graph, MAX_DENSE_DEGREE_NODES, compact_subgraph,
+                             degree_histogram, in_degrees, out_degrees,
+                             sparse_degree_histogram)
+
+
+def _reference_ratios(src, dst, n, m):
+    """The historical per-level numpy loop (pre-engine
+    estimate_ratios_mle) — kept here as the oracle."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    counts = np.zeros(4, np.float64)
+    for ell in range(min(n, m)):
+        sb = (src >> (n - 1 - ell)) & 1
+        db = (dst >> (m - 1 - ell)) & 1
+        counts += np.bincount(sb * 2 + db, minlength=4)
+    return counts / max(counts.sum(), 1)
+
+
+def _chunked(arr_pairs, sizes):
+    """Split (src, dst) into uneven chunks."""
+    out = []
+    off = 0
+    for s in sizes:
+        out.append(tuple(a[off: off + s] for a in arr_pairs))
+        off += s
+    return out
+
+
+# -- BitPairMLE --------------------------------------------------------------
+
+def test_bitpair_mle_matches_reference_loop(rng):
+    n, m = 9, 7
+    src = rng.integers(0, 1 << n, 20_000).astype(np.int32)
+    dst = rng.integers(0, 1 << m, 20_000).astype(np.int32)
+    assert np.array_equal(estimate_ratios_mle(src, dst, n, m),
+                          _reference_ratios(src, dst, n, m))
+
+
+def test_bitpair_mle_streamed_equals_inmemory_any_order(rng):
+    n = m = 10
+    src = rng.integers(0, 1 << n, 30_000).astype(np.int32)
+    dst = rng.integers(0, 1 << m, 30_000).astype(np.int32)
+    whole = fe.BitPairMLE(n, m).update(src, dst)
+    chunks = _chunked((src, dst), [7000, 11000, 1, 0, 11999])
+    fwd = fe.BitPairMLE(n, m)
+    rev = fe.BitPairMLE(n, m)
+    for s, d in chunks:
+        fwd.update(s, d)
+    for s, d in chunks[::-1]:
+        rev.update(s, d)
+    assert np.array_equal(whole.counts, fwd.counts)
+    assert np.array_equal(whole.counts, rev.counts)
+    assert whole.rows == fwd.rows == rev.rows == 30_000
+
+
+def test_bitpair_mle_wide_int64_no_x64(rng):
+    assert not jax.config.jax_enable_x64
+    n = m = 34
+    src = rng.integers(0, 1 << n, 10_000).astype(np.int64)
+    dst = rng.integers(0, 1 << m, 10_000).astype(np.int64)
+    got = estimate_ratios_mle(src, dst, n, m)
+    assert np.array_equal(got, _reference_ratios(src, dst, n, m))
+    # bits above 31 actually reach the counts (hi word is read)
+    top = fe.BitPairMLE(n, m).update(src, dst).counts[0]
+    sb = (src >> (n - 1)) & 1
+    db = (dst >> (m - 1)) & 1
+    assert np.array_equal(top, np.bincount(sb * 2 + db, minlength=4))
+
+
+# -- DegreeSketch ------------------------------------------------------------
+
+def test_degree_sketch_dense_matches_graph_ops(rng):
+    n_nodes, kmax = 512, 32
+    ids = rng.integers(0, n_nodes, 20_000).astype(np.int32)
+    g = Graph(ids, ids, n_nodes, n_nodes)
+    ref = np.asarray(degree_histogram(out_degrees(g), kmax))
+    sk = fe.DegreeSketch(n_nodes, kmax=kmax)
+    for s in _chunked((ids,), [1, 4999, 15000]):
+        sk.update(s[0])
+    hist, max_deg = sk.finalize()
+    assert np.array_equal(hist, ref)
+    assert max_deg == int(np.asarray(out_degrees(g)).max())
+
+
+def test_degree_sketch_bucketed_equals_dense(rng):
+    n_nodes, kmax = 10_000, 64
+    ids = rng.integers(0, n_nodes, 50_000)
+    dense = fe.DegreeSketch(n_nodes, kmax=kmax).update(ids)
+    # force the out-of-core path with a tiny bucket, streamed in chunks
+    buck = fe.DegreeSketch(n_nodes, kmax=kmax, dense_limit=257)
+    for s in _chunked((ids,), [20_000, 30_000])[::-1]:
+        buck.update(s[0])
+    assert buck.mode == "bucketed"
+    h_d, m_d = dense.finalize()
+    h_b, m_b = buck.finalize()
+    assert np.array_equal(h_d, h_b) and m_d == m_b
+
+
+def test_degree_sketch_wide_id_space(rng):
+    """2^34-node id space: the sketch must neither allocate the space
+    nor lose counts (sparse unique replay path)."""
+    ids = rng.integers(0, 1 << 34, 5_000).astype(np.int64)
+    ids[:100] = ids[0]                       # one heavy node
+    sk = fe.DegreeSketch(1 << 34, kmax=128)
+    sk.update(ids[:2500])
+    sk.update(ids[2500:])
+    hist, max_deg = sk.finalize()
+    ref, ref_max = sparse_degree_histogram(ids, 1 << 34, 128)
+    assert np.array_equal(hist, ref)
+    assert max_deg == ref_max >= 100
+
+
+def test_dense_degree_guard_raises():
+    g = Graph(np.zeros(1, np.int64), np.zeros(1, np.int64),
+              1 << 34, 1 << 34)
+    with pytest.raises(ValueError, match="DegreeSketch"):
+        out_degrees(g)
+    with pytest.raises(ValueError, match="DegreeSketch"):
+        in_degrees(g)
+    with pytest.raises(ValueError, match="DegreeSketch"):
+        degree_histogram(np.array([MAX_DENSE_DEGREE_NODES + 1]))
+    # sparse path handles the same space fine
+    hist, _ = sparse_degree_histogram(np.zeros(10, np.int64), 1 << 34, 16)
+    assert hist[10] == 1 and hist[0] == (1 << 34) - 1
+
+
+# -- ReservoirSample / Moments ----------------------------------------------
+
+def _chunks_of(src, dst, cont, cat, sizes):
+    out = []
+    off = 0
+    for s in sizes:
+        out.append(fe.FitChunk(src[off:off + s], dst[off:off + s],
+                               cont[off:off + s], cat[off:off + s],
+                               start_row=off))
+        off += s
+    return out
+
+
+def test_reservoir_order_invariant_and_matches_inmemory(rng):
+    n = 10_000
+    src = rng.integers(0, 100, n).astype(np.int32)
+    dst = rng.integers(0, 100, n).astype(np.int32)
+    cont = rng.normal(size=(n, 2)).astype(np.float32)
+    cat = rng.integers(0, 4, size=(n, 1)).astype(np.int32)
+    chunks = _chunks_of(src, dst, cont, cat, [3000, 1, 2999, 4000])
+    whole = fe.ReservoirSample(500, seed=7).update(
+        fe.FitChunk(src, dst, cont, cat, 0)).finalize()
+    fwd = fe.ReservoirSample(500, seed=7)
+    rev = fe.ReservoirSample(500, seed=7)
+    for c in chunks:
+        fwd.update(c)
+    for c in chunks[::-1]:
+        rev.update(c)
+    fwd, rev = fwd.finalize(), rev.finalize()
+    for k in ("rows", "src", "dst", "cont", "cat"):
+        assert np.array_equal(whole[k], fwd[k]), k
+        assert np.array_equal(whole[k], rev[k]), k
+    # the sample is real rows from the stream
+    r = whole["rows"]
+    assert len(r) == 500 and np.array_equal(whole["cont"], cont[r])
+    # a different seed picks a different set
+    other = fe.ReservoirSample(500, seed=8).update(
+        fe.FitChunk(src, dst, cont, cat, 0)).finalize()
+    assert not np.array_equal(other["rows"], r)
+
+
+def test_reservoir_stratified_caps_chunk_share(rng):
+    n = 8000
+    src = rng.integers(0, 100, n).astype(np.int32)
+    chunk_rows = 1000
+    chunks = [fe.FitChunk(src[o:o + chunk_rows], src[o:o + chunk_rows],
+                          None, None, o)
+              for o in range(0, n, chunk_rows)]
+    res = fe.ReservoirSample(400, seed=0, stratified=True, total_rows=n)
+    for c in chunks:
+        res.update(c)
+    out = res.finalize()
+    assert out["provenance"]["kind"] == "stratified"
+    per_chunk = np.bincount(out["rows"] // chunk_rows, minlength=8)
+    assert per_chunk.max() <= -(-400 * chunk_rows // n)  # quota = ceil
+    assert len(out["rows"]) <= 400
+
+
+def test_moments_exact_across_orderings(rng):
+    cont = rng.normal(size=(9000, 3)).astype(np.float32)
+    chunks = [cont[:4000], cont[4000:4001], cont[4001:]]
+    fwd = fe.Moments(3)
+    rev = fe.Moments(3)
+    for c in chunks:
+        fwd.update(c)
+    for c in chunks[::-1]:
+        rev.update(c)
+    assert fwd.finalize() == rev.finalize()     # bit-identical via fsum
+    m = fwd.finalize()[0]
+    ref = cont[:, 0].astype(np.float64)
+    assert m["count"] == 9000
+    assert abs(m["mean"] - ref.mean()) < 1e-12
+    assert abs(m["var"] - ref.var()) < 1e-9
+    assert m["min"] == ref.min() and m["max"] == ref.max()
+
+
+# -- accumulate + fit_structure_streamed ------------------------------------
+
+FIT = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=13, m=13, E=60_000)
+
+
+def _dataset(tmp_path, features=None, fit=FIT, shard_edges=16_384, seed=0):
+    from repro.datastream import DatasetJob
+    out = str(tmp_path / "ds")
+    job = DatasetJob(fit, out, shard_edges=shard_edges, seed=seed,
+                     features=features, backend="xla")
+    job.run()
+    return out
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    """One shared structure-only dataset (read-only in every user)."""
+    return _dataset(tmp_path_factory.mktemp("fitds"))
+
+
+def test_accumulate_dataset_equals_inmemory_arrays(dataset):
+    out = dataset
+    ds_src = DatasetFitSource(out, chunk_rows=5000)
+    from repro.datastream import ShardedGraphDataset
+    g = ShardedGraphDataset(out).to_graph()
+    arr_src = ArrayFitSource.from_graph(g, chunk_rows=999_999)
+    s1 = fe.accumulate(ds_src, sample_rows=800, seed=1)
+    s2 = fe.accumulate(arr_src, sample_rows=800, seed=1)
+    assert np.array_equal(s1.bitpair, s2.bitpair)
+    assert np.array_equal(s1.hist_out, s2.hist_out)
+    assert np.array_equal(s1.hist_in, s2.hist_in)
+    assert (s1.max_deg_out, s1.max_deg_in) == (s2.max_deg_out,
+                                               s2.max_deg_in)
+    assert np.array_equal(s1.sample["rows"], s2.sample["rows"])
+    assert np.array_equal(s1.sample["src"], s2.sample["src"])
+
+
+def test_fit_json_identical_across_shard_orderings(dataset):
+    out = dataset
+    n_shards = len(DatasetFitSource(out).ds)
+    assert n_shards > 1
+    order = list(range(n_shards))[::-1]
+    texts = []
+    for shard_order in (None, order):
+        src = DatasetFitSource(out, chunk_rows=7000,
+                               shard_order=shard_order)
+        stats = fe.accumulate(src, sample_rows=500)
+        fit, prov = fe.fit_structure_streamed(stats)
+        texts.append(fe.fit_to_json(fit, prov))
+    assert texts[0] == texts[1]
+    fit, prov = fe.fit_from_json(texts[0])
+    assert prov["chosen"] in {c["candidate"]
+                              for c in prov["calibration"]}
+
+
+def test_streamed_fit_recovers_theta(dataset):
+    out = dataset
+    stats = fe.accumulate(DatasetFitSource(out), sample_rows=500)
+    fit, prov = fe.fit_structure_streamed(stats)
+    mle = prov["theta_mle"]
+    truth = (FIT.a, FIT.b, FIT.c, FIT.d)
+    assert max(abs(a - b) for a, b in zip(mle, truth)) < 0.02
+    assert max(abs(x - y) for x, y in
+               zip((fit.a, fit.b, fit.c, fit.d), truth)) < 0.07
+
+
+@pytest.mark.slow
+def test_streamed_fit_wide_int64_ids(tmp_path):
+    """Fit over an int64 dataset (2^34-node space) without x64: bit-pair
+    MLE through (hi, lo) words, sketches through the bucketed/sparse
+    paths, calibration without dense degree arrays."""
+    wide = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=34, m=34,
+                        E=20_000)
+    out = _dataset(tmp_path, fit=wide, shard_edges=8192)
+    src = DatasetFitSource(out, chunk_rows=6000)
+    stats = fe.accumulate(src, sample_rows=300)
+    assert stats.n == stats.m == 34
+    fit, prov = fe.fit_structure_streamed(stats)
+    assert max(abs(a - b) for a, b in
+               zip(prov["theta_mle"], (0.45, 0.22, 0.2, 0.13))) < 0.05
+    assert fit.n == 34 and fit.E == 20_000
+    json.loads(fe.fit_to_json(fit, prov))     # serializable
+
+
+# -- fitsource ---------------------------------------------------------------
+
+def test_as_fit_source_coercions(dataset, rng):
+    src = rng.integers(0, 64, 500).astype(np.int32)
+    dst = rng.integers(0, 64, 500).astype(np.int32)
+    g = Graph(src, dst, 64, 64)
+    assert isinstance(as_fit_source(g), ArrayFitSource)
+    cont = rng.normal(size=(500, 1)).astype(np.float32)
+    cat = rng.integers(0, 2, size=(500, 1)).astype(np.int32)
+    s = as_fit_source((g, cont, cat))
+    assert s.has_features and s.total_rows == 500
+    out = dataset
+    s2 = as_fit_source(out)
+    assert isinstance(s2, DatasetFitSource)
+    assert s2.total_rows == FIT.E
+    with pytest.raises(TypeError):
+        as_fit_source(12345)
+    with pytest.raises(ValueError, match="unknown shards"):
+        DatasetFitSource(out, shard_order=[999])
+
+
+def test_dataset_fit_source_structure_only_columns(tmp_path, rng):
+    from repro.core.aligner import RandomAligner
+    from repro.core.features import KDEFeatureGenerator
+    from repro.datastream import FeatureSpec
+    from repro.tabular.schema import infer_schema
+    cont = rng.normal(size=(400, 2)).astype(np.float32)
+    cat = rng.integers(0, 3, size=(400, 1)).astype(np.int32)
+    schema = infer_schema(cont, cat)
+    spec = FeatureSpec(KDEFeatureGenerator(schema).fit(cont, cat),
+                       RandomAligner(schema))
+    out = _dataset(tmp_path, features=spec)
+    full = DatasetFitSource(out)
+    only = DatasetFitSource(out, columns=("src", "dst"))
+    assert full.has_features and not only.has_features
+    chunk = next(only.chunks())
+    assert chunk.cont is None and chunk.cat is None
+
+
+# -- pipeline.fit_streamed ---------------------------------------------------
+
+def test_fit_streamed_round_trip_with_features(tmp_path, rng):
+    from repro.core.pipeline import SyntheticGraphPipeline
+    src = rng.integers(0, 512, 8000).astype(np.int32)
+    dst = rng.integers(0, 512, 8000).astype(np.int32)
+    g = Graph(src, dst, 512, 512)
+    cont = rng.normal(size=(8000, 2)).astype(np.float32)
+    cat = rng.integers(0, 3, size=(8000, 1)).astype(np.int32)
+    pipe = SyntheticGraphPipeline(features="kde", aligner="random")
+    pipe.fit(g, cont, cat)
+    ds_dir = str(tmp_path / "gen")
+    pipe.generate_streamed(ds_dir, seed=0, shard_edges=3000)
+
+    pipe2 = SyntheticGraphPipeline(features="kde", aligner="random")
+    pipe2.fit_streamed(ds_dir, sample_rows=2000, chunk_rows=2500)
+    # exact cardinalities survive the full pass (not just the sample)
+    assert pipe2.schema.n_cont == 2 and pipe2.schema.cat_cards == (3,)
+    assert pipe2.timings.fit_struct_s > 0
+    assert pipe2.fit_provenance["sample"]["rows"] == 2000
+    g2, c2, k2 = pipe2.generate(seed=3)
+    assert g2.n_edges == pipe2.struct.E
+    assert c2.shape == (g2.n_edges, 2) and k2.shape == (g2.n_edges, 1)
+    assert k2.max() < 3
+
+    # non-kronecker structure refuses
+    with pytest.raises(ValueError, match="kronecker"):
+        SyntheticGraphPipeline(struct="er").fit_streamed(ds_dir)
+
+
+def test_fit_streamed_structure_only_dataset(dataset):
+    from repro.core.pipeline import SyntheticGraphPipeline
+    out = dataset
+    pipe = SyntheticGraphPipeline(features="random", aligner="random")
+    pipe.fit_streamed(out, sample_rows=400)
+    assert pipe.schema.n_cont == 0 and pipe.schema.cat_cards == ()
+    g, cont, cat = pipe.generate(seed=0)
+    assert cont.shape == (g.n_edges, 0) and cat.shape == (g.n_edges, 0)
+    # zero-width features: evaluate_all marks the feature terms absent
+    from repro.core.metrics import evaluate_all
+    m = evaluate_all(g, cont, cat, g, cont, cat)
+    assert m["feature_corr"] is None and m["degree_feat_dist"] is None
+    assert 0 <= m["degree_dist"] <= 1
+
+
+# -- compact_subgraph (moved to graph.ops) ----------------------------------
+
+def test_compact_subgraph_preserves_structure(rng):
+    src = rng.integers(0, 1 << 34, 300).astype(np.int64)
+    dst = rng.integers(0, 1 << 34, 300).astype(np.int64)
+    g = compact_subgraph(src, dst, bipartite=False)
+    assert g.n_src <= 600 and g.src.dtype == np.int32
+    # degree multiset survives the compaction
+    u, c = np.unique(src, return_counts=True)
+    u2, c2 = np.unique(np.asarray(g.src), return_counts=True)
+    assert np.array_equal(np.sort(c), np.sort(c2))
+    gb = compact_subgraph(src, dst, bipartite=True)
+    assert gb.bipartite and gb.n_src == len(np.unique(src))
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def _load_script(name):
+    import importlib.util
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_fit_dataset_cli_round_trip(dataset, tmp_path):
+    fit_cli = _load_script("fit_dataset")
+    out = dataset
+    fit_json = str(tmp_path / "fit.json")
+    rc = fit_cli.main(["--dataset", out, "--out", fit_json,
+                       "--sample-rows", "500", "--check-theta", "0.07"])
+    assert rc == 0
+    with open(fit_json) as f:
+        d = json.load(f)
+    assert d["fit"]["n"] == FIT.n and d["fit"]["E"] == FIT.E
+    assert "bitpair_counts" in d["provenance"]
+    # two runs are byte-identical
+    fit_json2 = str(tmp_path / "fit2.json")
+    fit_cli.main(["--dataset", out, "--out", fit_json2,
+                  "--sample-rows", "500"])
+    with open(fit_json) as a, open(fit_json2) as b:
+        assert a.read() == b.read()
+    # an absurd tolerance fails the check
+    rc = fit_cli.main(["--dataset", out, "--out",
+                       str(tmp_path / "f3.json"), "--no-calibrate",
+                       "--sample-rows", "500", "--check-theta", "1e-9"])
+    assert rc == 1
+    # the fit JSON feeds generate_dataset.py --fit directly
+    gen_cli = _load_script("generate_dataset")
+    fit2 = gen_cli.build_fit(
+        type("A", (), {"fit": fit_json, "edges": None, "noise": 0.0})())
+    assert fit2.E == FIT.E and fit2.n == FIT.n
+
+
+# -- golden round trip at scale (acceptance criterion) -----------------------
+
+@pytest.mark.slow
+def test_golden_round_trip_2e20_edges_with_features(tmp_path, rng):
+    """generate_streamed (2^20 edges, features on) → fit_streamed over
+    the manifest: θ recovered within tolerance (MLE ±0.02, final fit
+    ±0.07), fit JSON byte-identical across two runs AND across chunk
+    orderings, peak fit memory bounded by chunk size (chunk_rows ≪ E)."""
+    from repro.core.aligner import RandomAligner
+    from repro.core.features import KDEFeatureGenerator
+    from repro.datastream import DatasetJob, FeatureSpec
+    from repro.tabular.schema import infer_schema
+
+    E = 1 << 20
+    fit = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=17, m=17, E=E)
+    cont = rng.normal(size=(2000, 2)).astype(np.float32)
+    cat = rng.integers(0, 4, size=(2000, 1)).astype(np.int32)
+    schema = infer_schema(cont, cat)
+    spec = FeatureSpec(KDEFeatureGenerator(schema).fit(cont, cat),
+                       RandomAligner(schema))
+    out = str(tmp_path / "big")
+    DatasetJob(fit, out, shard_edges=1 << 17, seed=0, features=spec,
+               backend="xla").run()
+
+    n_shards = len(DatasetFitSource(out).ds)
+    orders = [None, list(range(n_shards))[::-1]]
+    texts = []
+    for order in orders + [None]:           # last = second identical run
+        src = DatasetFitSource(out, chunk_rows=1 << 16,
+                               shard_order=order)
+        stats = fe.accumulate(src, sample_rows=10_000, seed=0)
+        f, prov = fe.fit_structure_streamed(stats)
+        texts.append(fe.fit_to_json(f, prov))
+    assert texts[0] == texts[1] == texts[2]
+
+    f, prov = fe.fit_from_json(texts[0])
+    truth = (fit.a, fit.b, fit.c, fit.d)
+    assert max(abs(a - b) for a, b in
+               zip(prov["theta_mle"], truth)) < 0.02
+    assert max(abs(x - y) for x, y in
+               zip((f.a, f.b, f.c, f.d), truth)) < 0.07
+    assert f.E == E and f.n == 17
+    # feature moments recorded with full-pass counts
+    assert prov["moments"][0]["count"] == E
+    assert prov["cat_cards"] == [4]

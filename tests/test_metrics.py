@@ -114,3 +114,62 @@ def test_gini_uniform_zero():
     skew = np.zeros(100)
     skew[0] = 100
     assert G.gini_coefficient(skew) > 0.95
+
+
+def test_theils_u_correlation_ratio_degenerate_inputs(rng):
+    """Constant/empty columns must yield finite values, never NaN —
+    a single NaN would poison the feature_correlation_score mean."""
+    empty_i = np.zeros(0, np.int32)
+    empty_f = np.zeros(0, np.float64)
+    const = np.zeros(50, np.int32)
+    x = rng.integers(0, 3, 50)
+    cont = rng.normal(size=50)
+    for val in (M.theils_u(empty_i, empty_i), M.theils_u(x, const),
+                M.theils_u(const, x),
+                M.correlation_ratio(empty_i, empty_f),
+                M.correlation_ratio(const, np.zeros(50)),
+                M.correlation_ratio(const, cont),
+                M.correlation_ratio(x, np.full(50, 3.0))):
+        assert np.isfinite(val) and 0.0 <= val <= 1.0
+
+
+def test_feature_correlation_score_constant_columns_finite(rng):
+    cont_r = np.stack([rng.normal(size=200),
+                       np.full(200, 2.0)], 1)          # one constant col
+    cat_r = np.stack([rng.integers(0, 3, 200),
+                      np.zeros(200, np.int64)], 1)     # one constant col
+    score = M.feature_correlation_score(cont_r, cat_r, cont_r, cat_r)
+    assert np.isfinite(score) and 0.0 <= score <= 1.0
+
+
+def test_evaluate_all_zero_feature_columns(rng):
+    g = _graph()
+    z_f = np.zeros((g.n_edges, 0), np.float32)
+    z_i = np.zeros((g.n_edges, 0), np.int32)
+    m = M.evaluate_all(g, z_f, z_i, g, z_f, z_i)
+    assert m["feature_corr"] is None
+    assert m["degree_feat_dist"] is None
+    assert m["degree_dist"] == pytest.approx(1.0)
+    assert np.isfinite(m["dcc"])
+    # featured inputs keep the historical behavior
+    cont = rng.normal(size=(g.n_edges, 1)).astype(np.float32)
+    cat = rng.integers(0, 2, (g.n_edges, 1)).astype(np.int32)
+    m2 = M.evaluate_all(g, cont, cat, g, cont, cat)
+    assert m2["feature_corr"] == pytest.approx(1.0)
+    assert m2["degree_feat_dist"] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_degree_counts_similarity_matches_graph_based(rng):
+    """The sketch-histogram similarity must agree with the in-memory
+    degree_dist_similarity when fed equivalent inputs."""
+    g1, g2 = _graph(0), _graph(3)
+    kmax = 4096   # above every observed degree: no tail clipping
+    h = {}
+    for name, g in (("a", g1), ("b", g2)):
+        ho, mo = G.sparse_degree_histogram(np.asarray(g.src), g.n_src, kmax)
+        hi, mi = G.sparse_degree_histogram(np.asarray(g.dst), g.n_dst, kmax)
+        h[name] = (ho, mo, hi, mi)
+    got = M.degree_counts_similarity(*h["a"], *h["b"])
+    ref = M.degree_dist_similarity(g1, g2)
+    assert got == pytest.approx(ref, abs=1e-12)
+    assert M.degree_counts_similarity(*h["a"], *h["a"]) == pytest.approx(1.0)
