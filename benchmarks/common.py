@@ -1,15 +1,34 @@
-"""Shared benchmark helpers: timing + CSV row protocol.
+"""Shared benchmark helpers: timing, CSV row protocol, BENCH envelope.
 
 Every table module exposes ``run(fast: bool) -> list[dict]`` with keys
 ``name, us_per_call, derived`` (derived = the table's headline quantity).
 ``benchmarks.run`` prints them as CSV and writes JSON under results/bench/.
+
+``emit_bench`` writes the suites that CI trends across PRs
+(``BENCH_*.json``) in the unified envelope from ``repro.obs.metrics``:
+``{schema_version, suite, created_unix, env: {git_sha, host, device,
+...}, metrics: <payload>}`` — readers take the payload from
+``["metrics"]`` and the provenance from ``["env"]``.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict, List
+from typing import Any, Callable, Dict, List
+
+from repro.obs.metrics import write_bench
+
+BENCH_DIR = "results/bench"
+
+
+def emit_bench(suite: str, metrics: Any,
+               extra: Dict[str, Any] = None) -> Dict[str, Any]:
+    """Write ``results/bench/BENCH_<suite>.json`` in the unified
+    envelope (schema version + git SHA + host/device info wrapped
+    around the suite's payload)."""
+    path = os.path.join(BENCH_DIR, f"BENCH_{suite}.json")
+    return write_bench(suite, metrics, path, extra)
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:

@@ -5,12 +5,12 @@ Emits ``results/bench/BENCH_datastream.json``.
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import tempfile
 import time
 
+from benchmarks.common import emit_bench
 from repro.core.structure import KroneckerFit
 from repro.datastream import DatasetJob, ShardedGraphDataset
 
@@ -59,9 +59,7 @@ def run(fast: bool = True) -> dict:
     speedup = rows["serial"]["seconds"] / rows["double_buffered"]["seconds"]
     result = {"edges": E, "shard_edges": shard_edges,
               "overlap_speedup": speedup, **rows}
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, "BENCH_datastream.json"), "w") as f:
-        json.dump(result, f, indent=1)
+    emit_bench("datastream", result)
     print(f"datastream_overlap_speedup,{speedup:.3f},x")
     return result
 

@@ -10,12 +10,10 @@ shard scale is exactly the bottleneck this engine removes.
 """
 from __future__ import annotations
 
-import json
-import os
 
 import numpy as np
 
-from benchmarks.common import timeit
+from benchmarks.common import emit_bench, timeit
 from repro.core.aligner import AlignerConfig, GBDTAligner
 from repro.core.features import GANConfig, GANFeatureGenerator
 from repro.core.gbdt import GBDTConfig
@@ -149,9 +147,7 @@ def run(fast: bool = True) -> dict:
         print(f"features/{stage}_engine,0.0,{r['engine_rows_per_s']:.0f} "
               f"rows/s ({r['speedup_vs_reference']:.1f}x ref)")
 
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, "BENCH_features.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    emit_bench("features", res)
     return res
 
 

@@ -15,14 +15,13 @@ the standard ``results/bench/fig8_throughput.json``.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, row
+from benchmarks.common import emit, emit_bench, row
 from repro.core import sampler
 from repro.launch.mesh import HBM_BW
 
@@ -80,8 +79,7 @@ def run(fast: bool = True):
     rows.append(row("fig8/v5e_pod_256chips_prng", 0.0,
                     f"eps={256*min(eps_prng_mem, eps_prng_alu):.3e}"))
     out = emit(rows, "fig8_throughput")
-    with open("results/bench/BENCH_fig8.json", "w") as f:
-        json.dump(rows, f, indent=1)
+    emit_bench("fig8", rows)
     return out
 
 

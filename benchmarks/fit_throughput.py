@@ -10,7 +10,6 @@ edges, plus per-accumulator rates.  Writes
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import os
 import shutil
@@ -105,9 +104,8 @@ def run(fast: bool = True) -> dict:
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, "BENCH_fit.json"), "w") as f:
-        json.dump(res, f, indent=2)
+    from benchmarks.common import emit_bench
+    emit_bench("fit", res)
     for k in ("streamed_fit", "inmemory_fit", "bitpair_mle",
               "degree_sketch", "reservoir"):
         print(f"fit/{k},{res[k]['seconds'] * 1e6:.0f},"

@@ -62,10 +62,30 @@ def main(argv=None) -> int:
                     metavar="TOL",
                     help="exit 1 unless max |θ_fit − θ_manifest| <= TOL "
                          "(round-trip verification)")
+    ap.add_argument("--trace", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="record a span event log (crash-safe JSONL) of "
+                         "the fit pass; with no PATH it lands next to "
+                         "--out as OUT.trace.jsonl. Feed it to "
+                         "scripts/report_run.py")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write accumulate/fit timings as a unified "
+                         "BENCH-schema JSON")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace into DIR")
     args = ap.parse_args(argv)
 
     from repro.core import fit_engine
     from repro.datastream.fitsource import DatasetFitSource
+    from repro.obs import JsonlSink, Tracer, jaxprof, write_bench
+
+    tracer = Tracer()
+    trace_path = None
+    if args.trace is not None:
+        trace_path = (args.out + ".trace.jsonl"
+                      if args.trace == "auto" else args.trace)
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        tracer.add_sink(JsonlSink(trace_path))
 
     cols = (("src", "dst") if args.structure_only
             else ("src", "dst", "cont", "cat"))
@@ -81,14 +101,17 @@ def main(argv=None) -> int:
           f"({source.ds.manifest.dtype}), chunk_rows="
           f"{parse_count(args.chunk_rows):,}", file=sys.stderr)
     t0 = time.time()
-    stats = fit_engine.accumulate(source,
-                                  sample_rows=parse_count(args.sample_rows),
-                                  seed=args.seed, kmax=args.kmax)
-    t_acc = time.time() - t0
-    t0 = time.time()
-    fit, prov = fit_engine.fit_structure_streamed(
-        stats, noise=args.noise, calibrate=not args.no_calibrate)
-    t_fit = time.time() - t0
+    with jaxprof.trace(args.jax_profile):
+        stats = fit_engine.accumulate(
+            source, sample_rows=parse_count(args.sample_rows),
+            seed=args.seed, kmax=args.kmax, tracer=tracer)
+        t_acc = time.time() - t0
+        t0 = time.time()
+        with tracer.span("fit.theta"):
+            fit, prov = fit_engine.fit_structure_streamed(
+                stats, noise=args.noise, calibrate=not args.no_calibrate)
+        t_fit = time.time() - t0
+    tracer.close()
     text = fit_engine.fit_to_json(fit, prov)
     tmp = args.out + ".tmp"
     with open(tmp, "w") as f:
@@ -107,6 +130,18 @@ def main(argv=None) -> int:
     err = max(abs(fit.a - gen_fit["a"]), abs(fit.b - gen_fit["b"]),
               abs(fit.c - gen_fit["c"]), abs(fit.d - gen_fit["d"]))
     print(f"round-trip: max |θ_fit − θ_gen| = {err:.4f}", file=sys.stderr)
+    if trace_path:
+        print(f"trace: {trace_path}", file=sys.stderr)
+    if args.metrics_out:
+        write_bench("fit_dataset",
+                    {"timings": {"accumulate_s": t_acc, "theta_fit_s": t_fit,
+                                 "fit_read_s": tracer.total("fit.read"),
+                                 "fit_update_s": tracer.total("fit.update"),
+                                 "fit_finalize_s": tracer.total("fit.finalize")},
+                     "rows": stats.rows, "n_chunks": stats.n_chunks,
+                     "theta_err": err},
+                    args.metrics_out)
+        print(f"metrics: {args.metrics_out}", file=sys.stderr)
     if args.check_theta is not None and err > args.check_theta:
         print(f"CHECK FAILED: {err:.4f} > tolerance {args.check_theta}",
               file=sys.stderr)

@@ -112,13 +112,38 @@ def main(argv=None) -> int:
     ap.add_argument("--verify-deep", action="store_true",
                     help="alias of --verify (kept explicit so scripts can "
                          "name the deep semantics)")
+    ap.add_argument("--trace", nargs="?", const="auto", default=None,
+                    metavar="PATH",
+                    help="record a span event log (crash-safe JSONL) of "
+                         "the run; with no PATH it lands next to the "
+                         "dataset manifest as OUT/trace.jsonl. Feed it to "
+                         "scripts/report_run.py for a per-stage breakdown "
+                         "or a Perfetto/chrome://tracing export")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's counters/gauges/histograms + "
+                         "stage timings as a unified BENCH-schema JSON")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="additionally capture a jax.profiler device "
+                         "trace into DIR (TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
+
+    import os
 
     import numpy as np
 
     from repro.datastream import DatasetJob, ShardedGraphDataset
+    from repro.obs import JsonlSink, MetricsRegistry, Tracer, jaxprof, \
+        write_bench
 
     fit = build_fit(args)
+    tracer = Tracer()
+    metrics = MetricsRegistry()
+    trace_path = None
+    if args.trace is not None:
+        trace_path = (os.path.join(args.out, "trace.jsonl")
+                      if args.trace == "auto" else args.trace)
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
+        tracer.add_sink(JsonlSink(trace_path))
     try:
         job = DatasetJob(fit, args.out,
                          shard_edges=parse_count(args.shard_edges),
@@ -128,7 +153,8 @@ def main(argv=None) -> int:
                          backend=args.backend, id_dtype=args.id_dtype,
                          pipeline_depth=(0 if args.serial
                                          else args.pipeline_depth),
-                         host_workers=args.host_workers)
+                         host_workers=args.host_workers,
+                         tracer=tracer, metrics=metrics)
     except (KeyError, ValueError) as e:
         raise SystemExit(f"error: {e}")
     print(f"plan: E={fit.E:,} edges, 2^{fit.n}×2^{fit.m} ids "
@@ -140,14 +166,18 @@ def main(argv=None) -> int:
           f"host_workers={job.host_workers}", file=sys.stderr)
     t0 = time.time()
     try:
-        manifest = job.run(resume=args.resume, max_shards=args.max_shards,
-                           worker=args.worker)
+        with jaxprof.trace(args.jax_profile):
+            manifest = job.run(resume=args.resume,
+                               max_shards=args.max_shards,
+                               worker=args.worker)
     except FileExistsError:
         raise SystemExit(f"error: {args.out} already holds a dataset — "
                          "pass --resume to continue it, or choose a "
                          "different --out")
     except ValueError as e:
         raise SystemExit(f"error: {e}")
+    finally:
+        tracer.close()
     dt = time.time() - t0
     done = manifest.done_edges()
     t = job.timings
@@ -158,7 +188,16 @@ def main(argv=None) -> int:
     print(f"stages: struct {t['gen_struct_s']:.1f}s, "
           f"feat {t['gen_feat_s']:.1f}s, align {t['gen_align_s']:.1f}s, "
           f"write {t['write_s']:.1f}s busy over {t['wall_s']:.1f}s wall "
-          f"(overlap {t['overlap']:.2f}x)", file=sys.stderr)
+          f"(overlap {t['overlap']:.2f}x, stalled {t['stall_s']:.1f}s)",
+          file=sys.stderr)
+    if trace_path:
+        print(f"trace: {trace_path} (scripts/report_run.py for a "
+              f"breakdown, --perfetto for a timeline)", file=sys.stderr)
+    if args.metrics_out:
+        write_bench("generate_dataset",
+                    {"timings": t, "registry": metrics.snapshot()},
+                    args.metrics_out)
+        print(f"metrics: {args.metrics_out}", file=sys.stderr)
     if manifest.is_complete():
         ds = ShardedGraphDataset(args.out)
         assert ds.total_edges == fit.E

@@ -508,11 +508,17 @@ class StreamFitStats:
 
 def accumulate(source, sample_rows: int = 100_000, seed: int = 0,
                kmax: int = 2048, dense_limit: int = DENSE_NODE_LIMIT,
-               stratified: bool = False) -> StreamFitStats:
+               stratified: bool = False, tracer=None) -> StreamFitStats:
     """One pass over ``source`` (anything with ``n_src``/``n_dst``/
     ``bipartite``/``total_rows``/``has_features``/``chunks()``/
     ``describe()`` — see ``repro.datastream.fitsource``) through every
-    accumulator.  Memory: one chunk + the sketches."""
+    accumulator.  Memory: one chunk + the sketches.  ``tracer`` (a
+    ``repro.obs`` tracer) records per-chunk ``fit.read``/``fit.update``
+    spans and a ``fit.finalize`` span."""
+    from repro.obs import jaxprof
+    from repro.obs.trace import NULL_TRACER
+    tracer = tracer if tracer is not None else NULL_TRACER
+
     n = max(1, math.ceil(math.log2(max(source.n_src, 2))))
     m = max(1, math.ceil(math.log2(max(source.n_dst, 2))))
     mle = BitPairMLE(n, m)
@@ -524,23 +530,32 @@ def accumulate(source, sample_rows: int = 100_000, seed: int = 0,
     moments: Optional[Moments] = None
     cards: Optional[CatCards] = None
     n_chunks = 0
-    for chunk in source.chunks():
+    chunk_iter = iter(source.chunks())
+    while True:
+        with tracer.span("fit.read", chunk=n_chunks):
+            chunk = next(chunk_iter, None)
+        if chunk is None:
+            break
         n_chunks += 1
-        mle.update(chunk.src, chunk.dst)
-        sk_out.update(chunk.src)
-        sk_in.update(chunk.dst)
-        res.update(chunk)
-        if chunk.cont is not None:
-            if moments is None:
-                moments = Moments(chunk.cont.shape[1])
-            moments.update(chunk.cont)
-        if chunk.cat is not None:
-            if cards is None:
-                cards = CatCards(chunk.cat.shape[1])
-            cards.update(chunk.cat)
-    hist_out, max_out = sk_out.finalize()
-    hist_in, max_in = sk_in.finalize()
-    sample = res.finalize()
+        with tracer.span("fit.update", chunk=n_chunks - 1,
+                         rows=chunk.n_rows):
+            with jaxprof.annotation("fit.update"):
+                mle.update(chunk.src, chunk.dst)
+            sk_out.update(chunk.src)
+            sk_in.update(chunk.dst)
+            res.update(chunk)
+            if chunk.cont is not None:
+                if moments is None:
+                    moments = Moments(chunk.cont.shape[1])
+                moments.update(chunk.cont)
+            if chunk.cat is not None:
+                if cards is None:
+                    cards = CatCards(chunk.cat.shape[1])
+                cards.update(chunk.cat)
+    with tracer.span("fit.finalize"):
+        hist_out, max_out = sk_out.finalize()
+        hist_in, max_in = sk_in.finalize()
+        sample = res.finalize()
     return StreamFitStats(
         n=n, m=m, n_src=source.n_src, n_dst=source.n_dst,
         bipartite=source.bipartite, rows=mle.rows, n_chunks=n_chunks,

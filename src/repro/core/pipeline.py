@@ -41,10 +41,12 @@ class PipelineTimings:
     gen_feat_s: float = 0.0
     gen_align_s: float = 0.0
     # streamed generation only: writer-stage busy time, end-to-end wall
-    # time, and busy/wall overlap factor (>1 ⇒ stages ran concurrently)
+    # time, busy/wall overlap factor (>1 ⇒ stages ran concurrently) and
+    # how long the commit path sat blocked on the host/write stages
     gen_write_s: float = 0.0
     gen_wall_s: float = 0.0
     gen_overlap: float = 0.0
+    gen_stall_s: float = 0.0
 
 
 class SyntheticGraphPipeline:
@@ -96,7 +98,7 @@ class SyntheticGraphPipeline:
     def fit_streamed(self, source, sample_rows: int = 100_000,
                      chunk_rows: int = 1 << 20, kmax: int = 2048,
                      seed: int = 0, calibrate: bool = True,
-                     stratified: bool = False
+                     stratified: bool = False, tracer=None
                      ) -> "SyntheticGraphPipeline":
         """Fit every pipeline component from a chunked ``(src, dst,
         cont, cat)`` stream — a ``repro.datastream`` dataset directory,
@@ -129,13 +131,18 @@ class SyntheticGraphPipeline:
         if self.struct_kind != "kronecker":
             raise ValueError("streamed fitting supports the kronecker "
                              f"structure generator, not {self.struct_kind}")
+        from repro.obs.trace import NULL_TRACER
+        tracer = tracer if tracer is not None else NULL_TRACER
         src_obj = as_fit_source(source, chunk_rows=chunk_rows)
         t0 = time.time()
-        stats = fit_engine.accumulate(src_obj, sample_rows=sample_rows,
-                                      seed=seed, kmax=kmax,
-                                      stratified=stratified)
-        self.struct, self.fit_provenance = fit_engine.fit_structure_streamed(
-            stats, noise=self.noise, calibrate=calibrate)
+        with tracer.span("fit.struct"):
+            stats = fit_engine.accumulate(src_obj, sample_rows=sample_rows,
+                                          seed=seed, kmax=kmax,
+                                          stratified=stratified,
+                                          tracer=tracer)
+            self.struct, self.fit_provenance = \
+                fit_engine.fit_structure_streamed(
+                    stats, noise=self.noise, calibrate=calibrate)
         self.timings.fit_struct_s = time.time() - t0
 
         sample = stats.sample
@@ -150,22 +157,25 @@ class SyntheticGraphPipeline:
                                   cat_cards=stats.cat_cards)
 
         t0 = time.time()
-        gen_cls = FEATURE_GENERATORS[self.feat_kind]
-        self.features = gen_cls(self.schema)
-        # zero-width tables carry nothing to learn: skip the GAN steps
-        steps = self.gan_steps if (stats.n_cont + len(stats.cat_cards)) \
-            else 0
-        self.features.fit(cont_s, cat_s, steps=steps)
+        with tracer.span("fit.features"):
+            gen_cls = FEATURE_GENERATORS[self.feat_kind]
+            self.features = gen_cls(self.schema)
+            # zero-width tables carry nothing to learn: skip the GAN steps
+            steps = self.gan_steps if (stats.n_cont + len(stats.cat_cards)) \
+                else 0
+            self.features.fit(cont_s, cat_s, steps=steps)
         self.timings.fit_feat_s = time.time() - t0
 
         t0 = time.time()
-        g_local = compact_subgraph(sample["src"], sample["dst"],
-                                   stats.bipartite)
-        al_cls = ALIGNERS[self.aligner_kind]
-        self.aligner = al_cls(self.schema, kind=self.feature_kind) \
-            if self.aligner_kind == "random" else \
-            al_cls(self.schema, self.aligner_cfg, kind=self.feature_kind)
-        self.aligner.fit(g_local, cont_s, cat_s)
+        with tracer.span("fit.align"):
+            g_local = compact_subgraph(sample["src"], sample["dst"],
+                                       stats.bipartite)
+            al_cls = ALIGNERS[self.aligner_kind]
+            self.aligner = al_cls(self.schema, kind=self.feature_kind) \
+                if self.aligner_kind == "random" else \
+                al_cls(self.schema, self.aligner_cfg,
+                       kind=self.feature_kind)
+            self.aligner.fit(g_local, cont_s, cat_s)
         self.timings.fit_align_s = time.time() - t0
         self._g_ref = g_local
         return self
@@ -229,7 +239,8 @@ class SyntheticGraphPipeline:
                           double_buffered: bool = True,
                           resume: bool = False, mode: str = "chunks",
                           backend: Optional[str] = None, id_dtype=None,
-                          pipeline_depth: int = 2, host_workers: int = 1):
+                          pipeline_depth: int = 2, host_workers: int = 1,
+                          tracer=None, metrics=None):
         """Materialize the generated graph to a sharded on-disk dataset
         instead of host memory (see ``repro.datastream``) — the path for
         outputs that exceed RAM.  Returns a ``ShardedGraphDataset``.
@@ -252,6 +263,12 @@ class SyntheticGraphPipeline:
         ``gen_align_s``, writes in ``gen_write_s``; ``gen_wall_s`` is
         end-to-end and ``gen_overlap`` (busy/wall) reports how much the
         pipeline actually hid.
+
+        ``tracer``/``metrics`` (a ``repro.obs`` ``Tracer`` /
+        ``MetricsRegistry``) flow through the executor into every stage;
+        attach a sink (e.g. ``JsonlSink``) before calling to capture the
+        run's event timeline.  The stage timings above are derived from
+        the same spans either way.
         """
         from repro.datastream import DatasetJob, FeatureSpec
 
@@ -269,7 +286,8 @@ class SyntheticGraphPipeline:
                          k_pref=k_pref, double_buffered=double_buffered,
                          mode=mode, features=features, backend=backend,
                          id_dtype=id_dtype, pipeline_depth=pipeline_depth,
-                         host_workers=host_workers)
+                         host_workers=host_workers, tracer=tracer,
+                         metrics=metrics)
         job.run(resume=resume)
         self.timings.gen_struct_s = job.timings["gen_struct_s"]
         self.timings.gen_feat_s = job.timings["gen_feat_s"]
@@ -277,4 +295,5 @@ class SyntheticGraphPipeline:
         self.timings.gen_write_s = job.timings["write_s"]
         self.timings.gen_wall_s = job.timings["wall_s"]
         self.timings.gen_overlap = job.timings["overlap"]
+        self.timings.gen_stall_s = job.timings["stall_s"]
         return job.dataset()

@@ -33,9 +33,21 @@ tests compare against).  Per-stage *busy* time is accumulated separately
 from wall time so ``stats.overlap`` (busy/wall) reports how much the
 stages actually overlapped: ~1.0 means serial behaviour, >1 means the
 pipeline hid host or IO time behind the device.
+
+Observability: the executor owns one ``repro.obs`` tracer + metrics
+registry per run (or adopts the ones ``DatasetJob`` passes in) and
+threads them through the source, the feature spec and the writer, so
+every stage reports into one timeline: ``struct`` spans on the calling
+thread, ``feat``/``align`` spans on the host pool threads, ``write``
+spans on the flush thread, ``stall.host``/``stall.write`` spans where
+the pipeline blocked.  ``ExecutorStats`` is *derived from* those spans
+(same keys and semantics as the ad-hoc timers it replaced); attach a
+sink (``--trace``) and the identical numbers come with a replayable
+event log.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import sys
 import time
@@ -47,17 +59,23 @@ import numpy as np
 
 from repro.datastream.source import FeatureSpec, ShardSource
 from repro.datastream.writer import ShardRecord, ShardWriter
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 
 
 @dataclasses.dataclass
 class ExecutorStats:
-    """Per-stage busy seconds vs wall seconds of one ``run`` call."""
+    """Per-stage busy seconds vs wall seconds of one ``run`` call —
+    derived from the run's ``struct``/``feat``/``align``/``write``
+    span aggregates.  ``stall_s`` is the time the commit path spent
+    blocked (waiting on a host feature future or a write-queue slot)."""
     n_shards: int = 0
     struct_s: float = 0.0
     feat_s: float = 0.0
     align_s: float = 0.0
     write_s: float = 0.0
     wall_s: float = 0.0
+    stall_s: float = 0.0
 
     @property
     def busy_s(self) -> float:
@@ -87,7 +105,9 @@ class ShardExecutor:
                  features: Optional[FeatureSpec] = None, seed: int = 0,
                  bipartite: bool = False,
                  feature_batch: Optional[int] = None,
-                 pipeline_depth: int = 2, host_workers: int = 1):
+                 pipeline_depth: int = 2, host_workers: int = 1,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if pipeline_depth < 0:
             raise ValueError(f"pipeline_depth must be >= 0, "
                              f"got {pipeline_depth}")
@@ -102,7 +122,24 @@ class ShardExecutor:
         self.feature_batch = feature_batch
         self.pipeline_depth = int(pipeline_depth)
         self.host_workers = int(host_workers)
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.stats = ExecutorStats()
+        self._adopt_obs()
+
+    def _adopt_obs(self) -> None:
+        """Point source/features/writer at this run's tracer + registry
+        so every stage reports into one timeline.  Components already
+        wired to a real tracer (e.g. by ``DatasetJob``, which passes the
+        same one here) are left alone; duck-typed stand-ins without the
+        attributes (test stubs) are skipped."""
+        for obj in (self.source, self.features, self.writer):
+            if obj is None:
+                continue
+            if getattr(obj, "tracer", "absent") in (None, NULL_TRACER):
+                obj.tracer = self.tracer
+            if getattr(obj, "metrics", "absent") is None:
+                obj.metrics = self.metrics
 
     # -- stages ------------------------------------------------------------
     def _feature_task(self, rec: ShardRecord,
@@ -123,15 +160,22 @@ class ShardExecutor:
     def _run_serial(self, records: Sequence[ShardRecord],
                     stats: ExecutorStats) -> None:
         for rec in records:
-            t0 = time.perf_counter()
-            arrays = self.source.generate(rec)
-            stats.struct_s += time.perf_counter() - t0
+            with self.tracer.span("struct", shard=rec.shard_id):
+                arrays = self.source.generate(rec)
             if self.features is not None:
                 arrays = self._feature_task(rec, arrays)
-            t0 = time.perf_counter()
-            self.writer.write_shard(rec.shard_id, arrays)
-            stats.write_s += time.perf_counter() - t0
+            with self._write_span(rec.shard_id):
+                self.writer.write_shard(rec.shard_id, arrays)
             stats.n_shards += 1
+
+    def _write_span(self, shard_id: int):
+        """Write-stage accounting: a real ``ShardWriter`` adopted into
+        this run's tracer spans its own ``write_shard``, so the caller
+        must not double-book; duck-typed writers without a tracer still
+        get their time recorded under ``write`` via this outer span."""
+        if getattr(self.writer, "tracer", None) is self.tracer:
+            return contextlib.nullcontext()
+        return self.tracer.span("write", shard=shard_id)
 
     # -- pipelined ---------------------------------------------------------
     def _run_pipelined(self, records: Sequence[ShardRecord],
@@ -141,21 +185,29 @@ class ShardExecutor:
                                    thread_name_prefix="shard-feat")
                 if self.features is not None else None)
         flush = self.writer.async_flush(depth=depth)
+        stalls = self.metrics.counter("executor.host_stalls", "stalls")
         #: (rec, future|None, arrays) in record order; commits pop left
         pending: deque = deque()
 
         def commit_one() -> None:
             rec, fut, arrays = pending.popleft()
             if fut is not None:
-                arrays = fut.result()   # re-raises a host-stage failure
+                if not fut.done():
+                    # the host stage is the bottleneck right now —
+                    # record how long the commit path waited on it
+                    stalls.inc()
+                    with self.tracer.span("stall.host",
+                                          shard=rec.shard_id):
+                        arrays = fut.result()
+                else:
+                    arrays = fut.result()   # re-raises a host failure
             flush.submit(rec.shard_id, arrays)
             stats.n_shards += 1
 
         try:
             for rec in records:
-                t0 = time.perf_counter()
-                arrays = self.source.generate(rec)
-                stats.struct_s += time.perf_counter() - t0
+                with self.tracer.span("struct", shard=rec.shard_id):
+                    arrays = self.source.generate(rec)
                 fut = (pool.submit(self._feature_task, rec, arrays)
                        if pool is not None else None)
                 pending.append((rec, fut, arrays))
@@ -190,23 +242,36 @@ class ShardExecutor:
                           f"pipeline teardown: {flush_err!r}",
                           file=sys.stderr)
             finally:
-                stats.write_s += flush.busy_s
+                if getattr(self.writer, "tracer", None) is not self.tracer:
+                    # duck-typed writer that doesn't span itself — fall
+                    # back to the flush queue's own busy accounting
+                    stats.write_s += flush.busy_s
 
     # -- entry point -------------------------------------------------------
+    _STAGE_TOTALS = ("struct", "write", "stall.host", "stall.write")
+
     def run(self, records: Sequence[ShardRecord]) -> ExecutorStats:
         """Materialize ``records`` (already filtered to pending work, in
-        commit order).  Returns per-stage stats; also kept on
-        ``self.stats``."""
+        commit order).  Returns per-stage stats (derived from the run's
+        span aggregates); also kept on ``self.stats``."""
         stats = ExecutorStats()
         feat0 = self._feat_snapshot()
+        t0 = {k: self.tracer.total(k) for k in self._STAGE_TOTALS}
         t_wall = time.perf_counter()
         try:
-            if self.pipeline_depth == 0:
-                self._run_serial(records, stats)
-            else:
-                self._run_pipelined(records, stats)
+            with self.tracer.span("run", n_shards=len(records),
+                                  depth=self.pipeline_depth):
+                if self.pipeline_depth == 0:
+                    self._run_serial(records, stats)
+                else:
+                    self._run_pipelined(records, stats)
         finally:
             stats.wall_s = time.perf_counter() - t_wall
+            delta = {k: self.tracer.total(k) - t0[k]
+                     for k in self._STAGE_TOTALS}
+            stats.struct_s = delta["struct"]
+            stats.write_s += delta["write"]
+            stats.stall_s = delta["stall.host"] + delta["stall.write"]
             feat1 = self._feat_snapshot()
             stats.feat_s = feat1[0] - feat0[0]
             stats.align_s = feat1[1] - feat0[1]

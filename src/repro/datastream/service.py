@@ -42,6 +42,8 @@ from repro.datastream.scheduler import ChunkScheduler
 from repro.datastream.source import (ChunkShardSource, DeviceStepShardSource,
                                      FeatureSpec, ShardSource)
 from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.utils import accepts_kwarg
 
 __all__ = ["DatasetJob", "FeatureSpec"]
@@ -83,7 +85,9 @@ class DatasetJob:
                  double_buffered: bool = True, mode: str = "chunks",
                  features: Optional[FeatureSpec] = None,
                  backend: Optional[str] = None, id_dtype=None,
-                 pipeline_depth: int = 2, host_workers: int = 1):
+                 pipeline_depth: int = 2, host_workers: int = 1,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert mode in ("chunks", "device_steps"), mode
         self.fit = fit
         self.out_dir = out_dir
@@ -95,12 +99,16 @@ class DatasetJob:
         self.features = features
         self.pipeline_depth = int(pipeline_depth)
         self.host_workers = int(host_workers)
+        self.tracer = tracer
+        self.metrics = metrics
         self.dtype = _edge_dtype(fit, id_dtype)
         # per-stage wall time of the last run() call (README "timings"):
-        # busy seconds per stage plus wall_s/overlap from the executor
+        # busy seconds per stage plus wall_s/overlap from the executor,
+        # all derived from the run's span aggregates (repro.obs)
         self.timings: Dict[str, float] = {
             "gen_struct_s": 0.0, "gen_feat_s": 0.0, "gen_align_s": 0.0,
-            "write_s": 0.0, "wall_s": 0.0, "overlap": 0.0}
+            "write_s": 0.0, "wall_s": 0.0, "overlap": 0.0,
+            "stall_s": 0.0}
         # resolve the engine backend by name at plan time: the chosen
         # name is recorded in the manifest (streams differ per backend,
         # so a resume on a different host must not silently switch).
@@ -286,7 +294,8 @@ class DatasetJob:
             bipartite=self.fit.bipartite,
             feature_batch=self._feature_batch(),
             pipeline_depth=self.pipeline_depth,
-            host_workers=self.host_workers)
+            host_workers=self.host_workers,
+            tracer=self.tracer, metrics=self.metrics)
         try:
             executor.run(records)
         finally:
@@ -299,7 +308,8 @@ class DatasetJob:
                 "gen_align_s": executor.stats.align_s,
                 "write_s": executor.stats.write_s,
                 "wall_s": executor.stats.wall_s,
-                "overlap": executor.stats.overlap}
+                "overlap": executor.stats.overlap,
+                "stall_s": executor.stats.stall_s}
         return manifest
 
     def resume(self, max_shards: Optional[int] = None,

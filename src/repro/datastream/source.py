@@ -48,6 +48,8 @@ from repro.core.structure import KroneckerFit
 from repro.datastream.scheduler import ChunkScheduler
 from repro.datastream.writer import ShardRecord, pump_chunks
 from repro.graph.ops import compact_subgraph
+from repro.obs import jaxprof
+from repro.obs.trace import NULL_TRACER
 from repro.utils import call_with_optional_kwargs
 
 _FEATURE_SALT = 0xFEA7
@@ -71,6 +73,7 @@ class FeatureSpec:
     batch: Optional[int] = None
     feat_s: float = 0.0
     align_s: float = 0.0
+    tracer: Any = NULL_TRACER           # set by the executor's _adopt_obs
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -92,18 +95,24 @@ class FeatureSpec:
         """
         rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
         b = batch or self.batch
+        # feat_s/align_s mirror the span durations so callers that only
+        # read the attributes see the same numbers a trace sink records;
+        # the perf_counter fallback covers the NULL_TRACER case (span
+        # durations read 0 when tracing is disabled).
         t0 = time.perf_counter()
-        cont, cat = call_with_optional_kwargs(self.generator.sample, rng,
-                                              len(src), batch=b)
-        dt_feat = time.perf_counter() - t0
+        with self.tracer.span("feat", shard=shard_id, rows=len(src)) as sp:
+            cont, cat = call_with_optional_kwargs(self.generator.sample, rng,
+                                                  len(src), batch=b)
+        dt_feat = sp.dur or (time.perf_counter() - t0)
         dt_align = 0.0
         if self.aligner is not None and len(src):
             # id compaction is part of the alignment cost
             t0 = time.perf_counter()
-            g_local = compact_subgraph(src, dst, bipartite)
-            cont, cat = call_with_optional_kwargs(
-                self.aligner.align, g_local, cont, cat, rng, batch=b)
-            dt_align = time.perf_counter() - t0
+            with self.tracer.span("align", shard=shard_id) as sp:
+                g_local = compact_subgraph(src, dst, bipartite)
+                cont, cat = call_with_optional_kwargs(
+                    self.aligner.align, g_local, cont, cat, rng, batch=b)
+            dt_align = sp.dur or (time.perf_counter() - t0)
         with self._lock:
             self.feat_s += dt_feat
             self.align_s += dt_align
@@ -123,6 +132,9 @@ class ShardSource:
     its struct stage only."""
 
     name = "base"
+    #: replaced per-instance by the executor's ``_adopt_obs`` so struct
+    #: sub-spans (dispatch/combine/device_step) land in the run timeline
+    tracer = NULL_TRACER
 
     def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
         raise NotImplementedError
@@ -163,26 +175,32 @@ class ChunkShardSource(ShardSource):
             m_s = self.fit.m - sched.k_pref
 
         def dispatch(ck):
-            if wide:
-                return be.sample_parts(sched.key_for(ck), suffix,
-                                       n_s, m_s, ck.n_edges)
-            return rmat.sample_chunk(sched.key_for(ck), self.fit, ck,
-                                     sched.k_pref, sched.thetas,
-                                     dtype=np_dtype,
-                                     backend=self.backend)
+            # host span times dispatch only (the device call is async);
+            # the jaxprof annotation names the device-side range when a
+            # --jax-profile trace is active
+            with self.tracer.span("struct.dispatch", chunk=ck.index):
+                with jaxprof.annotation("struct.dispatch"):
+                    if wide:
+                        return be.sample_parts(sched.key_for(ck), suffix,
+                                               n_s, m_s, ck.n_edges)
+                    return rmat.sample_chunk(sched.key_for(ck), self.fit,
+                                             ck, sched.k_pref,
+                                             sched.thetas, dtype=np_dtype,
+                                             backend=self.backend)
 
         def flush(ck, host):
             off = offsets[ck.index]
-            if wide:
-                sparts, dparts = host   # backend may pad past ck.n_edges
-                s = combine_ids(sparts, n_s, np_dtype,
-                                prefix=ck.src_prefix)[: ck.n_edges]
-                d = combine_ids(dparts, m_s, np_dtype,
-                                prefix=ck.dst_prefix)[: ck.n_edges]
-            else:
-                s, d = host
-            src_buf[off: off + ck.n_edges] = s
-            dst_buf[off: off + ck.n_edges] = d
+            with self.tracer.span("struct.combine", chunk=ck.index):
+                if wide:
+                    sparts, dparts = host  # backend may pad past n_edges
+                    s = combine_ids(sparts, n_s, np_dtype,
+                                    prefix=ck.src_prefix)[: ck.n_edges]
+                    d = combine_ids(dparts, m_s, np_dtype,
+                                    prefix=ck.dst_prefix)[: ck.n_edges]
+                else:
+                    s, d = host
+                src_buf[off: off + ck.n_edges] = s
+                dst_buf[off: off + ck.n_edges] = d
 
         pump_chunks(chunks, dispatch, flush,
                     double_buffered=self.double_buffered)
@@ -210,38 +228,44 @@ class DeviceStepShardSource(ShardSource):
         step shares shapes, so the shard_map trace/compile is paid a
         single time and steps differ only in their seed vector."""
         if self._step is None:
-            from jax.sharding import Mesh
-
-            from repro.core.distributed_gen import device_generate
-
-            mesh = Mesh(np.array(jax.devices()), ("d",))
-            n_dev = mesh.size
-            k_dev = int(np.log2(n_dev))
-            if 2 ** k_dev != n_dev:
-                raise ValueError(
-                    f"device count {n_dev} must be a power of two")
-            n_loc = self.fit.n - k_dev
-            epd = math.ceil(self.shard_edges / n_dev)
-            # full θ rows: the shared descend runs max(n_loc, m) levels
-            # (dst keeps all m levels; only src loses k_dev to the device
-            # prefix), so offsetting rows by k_dev would both starve the
-            # last k_dev dst levels and misalign the square levels.
-            thetas = jnp.asarray(self.thetas, jnp.float32)
-
-            @jax.jit
-            def step(seeds):
-                return device_generate(thetas, seeds, n_loc, self.fit.m,
-                                       epd, mesh, dtype=self.dtype)
-
-            self._step = (step, n_dev)
+            with self.tracer.span("struct.compile"):
+                self._step = self._build_step()
         return self._step
+
+    def _build_step(self):
+        from jax.sharding import Mesh
+
+        from repro.core.distributed_gen import device_generate
+
+        mesh = Mesh(np.array(jax.devices()), ("d",))
+        n_dev = mesh.size
+        k_dev = int(np.log2(n_dev))
+        if 2 ** k_dev != n_dev:
+            raise ValueError(
+                f"device count {n_dev} must be a power of two")
+        n_loc = self.fit.n - k_dev
+        epd = math.ceil(self.shard_edges / n_dev)
+        # full θ rows: the shared descend runs max(n_loc, m) levels
+        # (dst keeps all m levels; only src loses k_dev to the device
+        # prefix), so offsetting rows by k_dev would both starve the
+        # last k_dev dst levels and misalign the square levels.
+        thetas = jnp.asarray(self.thetas, jnp.float32)
+
+        @jax.jit
+        def step(seeds):
+            return device_generate(thetas, seeds, n_loc, self.fit.m,
+                                   epd, mesh, dtype=self.dtype)
+
+        return (step, n_dev)
 
     def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
         from repro.core.distributed_gen import step_seeds
 
         step, n_dev = self._setup()
-        seeds = step_seeds(self.seed, rec.shard_id, n_dev)
-        src, dst = step(jnp.asarray(seeds))
-        src = np.asarray(jax.device_get(src)).reshape(-1)
-        dst = np.asarray(jax.device_get(dst)).reshape(-1)
+        with self.tracer.span("struct.device_step", shard=rec.shard_id):
+            with jaxprof.annotation("struct.device_step"):
+                seeds = step_seeds(self.seed, rec.shard_id, n_dev)
+                src, dst = step(jnp.asarray(seeds))
+                src = np.asarray(jax.device_get(src)).reshape(-1)
+                dst = np.asarray(jax.device_get(dst)).reshape(-1)
         return {"src": src[: rec.n_edges], "dst": dst[: rec.n_edges]}

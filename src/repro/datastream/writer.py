@@ -34,6 +34,9 @@ from typing import Callable, Dict, Iterable, List, Optional
 import jax
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+
 MANIFEST_NAME = "manifest.json"
 JOURNAL_NAME = "progress.jsonl"
 FORMAT_VERSION = 1
@@ -78,6 +81,42 @@ def _atomic_save_npy(path: str, arr: np.ndarray) -> None:
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+#: bytes written (and CRC'd) per block by the fused save+checksum pass
+SAVE_BLOCK_BYTES = 1 << 23
+
+
+def _atomic_save_npy_crc(path: str, arr: np.ndarray,
+                         block_bytes: int = SAVE_BLOCK_BYTES) -> int:
+    """Atomically write ``arr`` as ``.npy`` AND return the crc32 of its
+    data bytes, in one streamed pass over the buffer.
+
+    The legacy write path touched every shard column three times —
+    ``np.save`` (write), ``.tobytes()`` (a full staging copy) and
+    ``zlib.crc32`` over that copy.  Under the executor's async flush the
+    staging copy also serialized against the struct stage on the GIL,
+    which is where BENCH_executor's 3x ``write_s`` inflation came from.
+    Here the header is written exactly as ``np.save`` writes it, then
+    the array's own buffer is fed block-by-block to both the file and
+    the chained crc — byte-identical file, bit-identical digest
+    (crc32 chains across blocks), zero staging copies.
+    """
+    arr = np.ascontiguousarray(arr)
+    tmp = path + ".tmp"
+    crc = 0
+    with open(tmp, "wb") as f:
+        np.lib.format.write_array_header_1_0(
+            f, np.lib.format.header_data_from_array_1_0(arr))
+        mv = memoryview(arr).cast("B")
+        for off in range(0, max(len(mv), 1), block_bytes):
+            block = mv[off: off + block_bytes]
+            f.write(block)
+            crc = zlib.crc32(block, crc)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return crc & 0xFFFFFFFF
 
 
 @dataclasses.dataclass
@@ -194,24 +233,43 @@ class Manifest:
 
 
 class ShardWriter:
-    """Atomic per-shard column writes + O(1)-per-shard progress journal."""
+    """Atomic per-shard column writes + O(1)-per-shard progress journal.
+
+    ``tracer``/``metrics`` (``repro.obs``) instrument the write path:
+    every committed shard is one ``write`` span (journal fsync as a
+    ``write.journal`` sub-span) and updates the rows/bytes counters and
+    the per-shard write-duration histogram.  Both default to the no-op
+    implementations; the executor adopts the writer into its own
+    tracer/registry so one run reports through one pipeline-wide set.
+    """
 
     COLUMNS = ("src", "dst", "cont", "cat")
 
     def __init__(self, out_dir: str, manifest: Manifest,
-                 checkpoint_every: int = 256):
+                 checkpoint_every: int = 256, tracer=None, metrics=None):
         self.out_dir = out_dir
         self.manifest = manifest
         self.checkpoint_every = checkpoint_every
+        # None = "unset": the executor (or DatasetJob) adopts the writer
+        # into the run's tracer/registry; standalone use lazily creates
+        # a private registry on first write.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
         self._since_checkpoint = 0
         os.makedirs(out_dir, exist_ok=True)
 
+    def _metrics(self) -> MetricsRegistry:
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        return self.metrics
+
     def _journal(self, rec: ShardRecord) -> None:
         path = os.path.join(self.out_dir, JOURNAL_NAME)
-        with open(path, "ab") as f:
-            f.write(json.dumps(rec.to_json()).encode() + b"\n")
-            f.flush()
-            os.fsync(f.fileno())
+        with self.tracer.span("write.journal", shard=rec.shard_id):
+            with open(path, "ab") as f:
+                f.write(json.dumps(rec.to_json()).encode() + b"\n")
+                f.flush()
+                os.fsync(f.fileno())
 
     def checkpoint(self) -> None:
         """Compact: persist the full manifest and truncate the journal
@@ -234,20 +292,32 @@ class ShardWriter:
         if len(src) != rec.n_edges or len(dst) != rec.n_edges:
             raise ValueError(f"shard {shard_id}: got {len(src)} edges, "
                              f"plan says {rec.n_edges}")
-        rec.files, rec.crc32 = {}, {}
-        for col in self.COLUMNS:
-            arr = arrays.get(col)
-            if arr is None:
-                continue
-            fname = f"{rec.stem}.{col}.npy"
-            _atomic_save_npy(os.path.join(self.out_dir, fname),
-                             np.asarray(arr))
-            rec.files[col] = fname
-            rec.crc32[col] = _crc32(np.asarray(arr))
-        rec.src_range = [int(src.min()), int(src.max())] if len(src) else None
-        rec.dst_range = [int(dst.min()), int(dst.max())] if len(dst) else None
-        rec.status = "done"
-        self._journal(rec)
+        n_bytes = 0
+        with self.tracer.span("write", shard=shard_id) as sp:
+            rec.files, rec.crc32 = {}, {}
+            for col in self.COLUMNS:
+                arr = arrays.get(col)
+                if arr is None:
+                    continue
+                arr = np.asarray(arr)
+                fname = f"{rec.stem}.{col}.npy"
+                # fused save+crc: one pass over the column, no staging
+                # copy — same file bytes and digest as np.save + _crc32
+                rec.crc32[col] = _atomic_save_npy_crc(
+                    os.path.join(self.out_dir, fname), arr)
+                rec.files[col] = fname
+                n_bytes += arr.nbytes
+            rec.src_range = ([int(src.min()), int(src.max())]
+                             if len(src) else None)
+            rec.dst_range = ([int(dst.min()), int(dst.max())]
+                             if len(dst) else None)
+            rec.status = "done"
+            self._journal(rec)
+        m = self._metrics()
+        m.counter("writer.rows_written", "rows").inc(rec.n_edges)
+        m.counter("writer.bytes_flushed", "bytes").inc(n_bytes)
+        m.counter("writer.shards_committed", "shards").inc()
+        m.histogram("writer.shard_write_s", "s").observe(sp.dur)
         self._since_checkpoint += 1
         if self._since_checkpoint >= self.checkpoint_every:
             self.checkpoint()
@@ -286,12 +356,15 @@ class AsyncFlushQueue:
     """Single-threaded, in-order, bounded shard flush.
 
     ``submit`` blocks when ``depth`` shards are already queued
-    (backpressure); the flush thread runs ``writer.write_shard`` in FIFO
-    order, so journal appends and manifest compaction points are
-    identical to the serial loop.  After a write failure the queue stops
-    writing (later shards are drained unwritten — the journal stays a
-    clean prefix) and ``submit``/``close`` re-raise the error.
-    ``busy_s`` accumulates write-stage busy time for overlap reporting.
+    (backpressure — measured as a ``stall.write`` span plus the
+    ``writer.backpressure_stalls`` counter); the flush thread runs
+    ``writer.write_shard`` in FIFO order, so journal appends and
+    manifest compaction points are identical to the serial loop.  After
+    a write failure the queue stops writing (later shards are drained
+    unwritten — the journal stays a clean prefix) and ``submit``/
+    ``close`` re-raise the error.  ``busy_s`` accumulates write-stage
+    busy time for overlap reporting; per-shard submit→committed latency
+    lands in the ``writer.commit_latency_s`` histogram (p50/p95/p99).
     """
 
     def __init__(self, writer: "ShardWriter", depth: int = 2):
@@ -299,11 +372,14 @@ class AsyncFlushQueue:
         self.busy_s = 0.0
         self._q: queue.Queue = queue.Queue(maxsize=max(1, int(depth)))
         self._err: Optional[BaseException] = None
+        writer._metrics()        # materialize before the thread races us
         self._thread = threading.Thread(target=self._loop,
                                         name="shard-flush", daemon=True)
         self._thread.start()
 
     def _loop(self) -> None:
+        latency = self.writer._metrics().histogram(
+            "writer.commit_latency_s", "s")
         while True:
             item = self._q.get()
             try:
@@ -311,10 +387,11 @@ class AsyncFlushQueue:
                     return
                 if self._err is not None:
                     continue        # drain, but keep the journal a prefix
-                shard_id, arrays = item
+                shard_id, arrays, t_submit = item
                 t0 = time.perf_counter()
                 try:
                     self.writer.write_shard(shard_id, arrays)
+                    latency.observe(time.perf_counter() - t_submit)
                 except BaseException as e:   # noqa: BLE001 — carried over
                     self._err = e
                 finally:
@@ -327,7 +404,17 @@ class AsyncFlushQueue:
             raise RuntimeError(
                 f"shard flush thread failed on an earlier shard: "
                 f"{self._err!r}") from self._err
-        self._q.put((shard_id, arrays))
+        metrics = self.writer._metrics()
+        item = (shard_id, arrays, time.perf_counter())
+        try:
+            self._q.put_nowait(item)
+        except queue.Full:
+            # the writer is the bottleneck right now: record how long
+            # the pipeline stalled waiting for a queue slot
+            metrics.counter("writer.backpressure_stalls", "stalls").inc()
+            with self.writer.tracer.span("stall.write", shard=shard_id):
+                self._q.put(item)
+        metrics.gauge("writer.queue_depth", "shards").set(self._q.qsize())
 
     def close(self) -> None:
         """Drain the queue, join the flush thread, re-raise any write

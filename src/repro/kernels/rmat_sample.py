@@ -152,10 +152,15 @@ def rmat_sample_bits(thetas, bits, n: int, m: int,
 
 
 def rmat_sample_prng(seed, thetas, n: int, m: int, n_edges: int,
-                     block: int = DEFAULT_BLOCK
+                     block: int = DEFAULT_BLOCK, interpret: bool = False
                      ) -> Tuple[IdParts, IdParts]:
     """TPU-only fast path (no HBM uniform traffic).  seed: (2,) int32
-    (the PRNG-key words; see ``_kernel_prng``)."""
+    (the PRNG-key words; see ``_kernel_prng``).
+
+    ``interpret=True`` requests pallas interpret mode: it only succeeds
+    where the host provides interpret rules for ``pltpu.prng_*`` — on
+    plain CPU jax it raises (no lowering for ``prng_seed``), which the
+    smoke test in ``tests/test_sampler.py`` maps to a skip."""
     assert pltpu is not None, "requires TPU pallas"
     L = max(n, m)
     assert n_edges % block == 0
@@ -170,6 +175,6 @@ def rmat_sample_prng(seed, thetas, n: int, m: int, n_edges: int,
         ],
         out_specs=specs,
         out_shape=shapes,
-        interpret=False,
+        interpret=interpret,
     )(seed, thetas)
     return pack(outs)

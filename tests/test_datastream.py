@@ -500,6 +500,29 @@ def test_crc32_stream_matches_oneshot():
     assert _crc32_stream(arr[:0], block_rows=64) == _crc32(arr[:0])
 
 
+@pytest.mark.parametrize("arr", [
+    np.arange(10_007, dtype=np.int64),
+    np.arange(33, dtype=np.int32).reshape(11, 3) * 7,      # 2-D, small
+    np.zeros((0,), np.float32),                            # empty
+    np.random.default_rng(0).normal(size=(5000, 4)).astype(np.float32),
+], ids=["int64-1d", "int32-2d", "empty", "f32-2d"])
+def test_fused_save_crc_matches_legacy_bytes_and_digest(tmp_path, arr):
+    """The fused single-pass save+crc (which replaced the np.save +
+    .tobytes() staging copy + crc triple pass) must stay byte-identical
+    on disk and digest-identical to the legacy path, across dtypes,
+    shapes, empties, and block boundaries."""
+    from repro.datastream.writer import (_atomic_save_npy,
+                                         _atomic_save_npy_crc, _crc32)
+    legacy, fused = str(tmp_path / "legacy.npy"), str(tmp_path / "f.npy")
+    _atomic_save_npy(legacy, arr)
+    # tiny block size forces the multi-block chaining path
+    crc = _atomic_save_npy_crc(fused, arr, block_bytes=64)
+    assert open(fused, "rb").read() == open(legacy, "rb").read()
+    assert crc == _crc32(arr)
+    np.testing.assert_array_equal(np.load(fused), arr)
+    assert not os.path.exists(fused + ".tmp")              # atomic rename
+
+
 def test_deep_verify_streams_blocks_and_catches_corruption(
         tmp_path, monkeypatch):
     from repro.datastream import writer as writer_mod

@@ -48,6 +48,41 @@ def test_registry_and_auto_selection():
     assert sampler.resolve_backend("pallas_bits").name == "pallas_bits"
 
 
+def test_pallas_prng_interpret_smoke():
+    """Smoke the TPU PRNG kernel variant off-TPU: attempt interpret mode
+    and either validate its output envelope + determinism, or skip with
+    the registry's gating reason (``pltpu.prng_*`` has no CPU/GPU
+    interpret rule) — the skip reason and the reason ``resolve_backend``
+    reports must agree, so a host where interpret starts working would
+    surface as a hard failure here, not silently stay gated."""
+    from repro.kernels import rmat_sample as rs
+    why = sampler.get_backend("pallas_prng").why_unavailable()
+    if rs.pltpu is None:
+        pytest.skip(f"pallas_prng unavailable: {why}")
+    n = m = 10
+    E, block = 1024, 512
+    seed = jnp.asarray([3, 7], jnp.int32)
+    th = _tiled_thetas(n)
+    try:
+        src, dst = rs.rmat_sample_prng(seed, th, n, m, E, block=block,
+                                       interpret=True)
+    except Exception as e:  # noqa: BLE001 — any lowering failure
+        assert why is not None, \
+            f"registry claims pallas_prng available but interpret died: {e}"
+        pytest.skip(f"pltpu PRNG interpret unsupported on this host "
+                    f"({why})")
+    # interpret ran: narrow ids → single lo word, in range, deterministic
+    assert src.hi is None and dst.hi is None
+    s, d = np.asarray(src.lo), np.asarray(dst.lo)
+    assert s.shape == d.shape == (E,)
+    assert s.min() >= 0 and int(s.max()) < 2 ** n
+    assert d.min() >= 0 and int(d.max()) < 2 ** m
+    s2, d2 = rs.rmat_sample_prng(seed, th, n, m, E, block=block,
+                                 interpret=True)
+    np.testing.assert_array_equal(s, np.asarray(s2.lo))
+    np.testing.assert_array_equal(d, np.asarray(d2.lo))
+
+
 def test_xla_backend_is_the_sample_edges_stream():
     """The engine's xla backend reproduces the PRE-ENGINE
     ``rmat.sample_edges`` stream bit-for-bit (the invariant that lets
