@@ -29,12 +29,28 @@ def _rows_per_sec(fn, n_rows, repeats=3):
 
 
 def _stage(ref_fn, ref_rows, engine_fn, engine_rows, repeats):
-    r = {"reference_rows": ref_rows, "engine_rows": engine_rows,
-         "reference_rows_per_s": _rows_per_sec(ref_fn, ref_rows, repeats),
-         "engine_rows_per_s": _rows_per_sec(engine_fn, engine_rows, repeats)}
-    r["speedup_vs_reference"] = (r["engine_rows_per_s"]
-                                 / r["reference_rows_per_s"])
-    return r
+    """Interleaved ref/engine timing: the 1-core bench box drifts ±30%
+    over a run, so timing all ref reps then all engine reps lets the
+    drift masquerade as speedup.  Each rep times the pair back to back;
+    the recorded speedup is the median of the per-rep ratios (rows/s are
+    the medians of their own samples)."""
+    import time as _time
+    ref_fn(), engine_fn()                  # warmup (jit compile)
+    ref_ts, eng_ts = [], []
+    for _ in range(repeats):
+        t0 = _time.perf_counter()
+        ref_fn()
+        ref_ts.append(_time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        engine_fn()
+        eng_ts.append(_time.perf_counter() - t0)
+    med = lambda ts: sorted(ts)[len(ts) // 2]
+    ratios = sorted((engine_rows / e) / (ref_rows / r)
+                    for r, e in zip(ref_ts, eng_ts))
+    return {"reference_rows": ref_rows, "engine_rows": engine_rows,
+            "reference_rows_per_s": ref_rows / med(ref_ts),
+            "engine_rows_per_s": engine_rows / med(eng_ts),
+            "speedup_vs_reference": ratios[len(ratios) // 2]}
 
 
 def _train_table(rng, n=4000):
@@ -48,7 +64,9 @@ def _train_table(rng, n=4000):
 def run(fast: bool = True) -> dict:
     n = 1 << 16 if fast else 1 << 20          # engine-side shard size
     n_ref = 1 << 11 if fast else 1 << 13      # reference-side cap
-    reps = 3 if fast else 2
+    reps = 3          # median of 3 in both modes: the per-row reference
+    # sides are noisy enough on a 1-core box that 2 reps let one bad
+    # sample set the ratio
     batch = min(n, 1 << 16)
     rng = np.random.default_rng(0)
     cont, cat = _train_table(rng)
@@ -114,11 +132,14 @@ def run(fast: bool = True) -> dict:
         return np.stack(cols, 1)
 
     # full per-column stack; capped row count (align only scores the two
-    # key columns — this stage times the all-columns predict)
+    # key columns — this stage times the all-columns predict).  5 paired
+    # reps: this ratio is the gated acceptance number, so its median
+    # gets more samples than the other stages
     n_pred = min(n, 1 << 18)
     res["gbdt_predict"] = _stage(
         lambda: _predict_np_reference(X_big[:n_ref]), n_ref,
-        lambda: al.predict_rows(X_big[:n_pred], batch=batch), n_pred, reps)
+        lambda: al.predict_rows(X_big[:n_pred], batch=batch), n_pred,
+        max(reps, 5))
 
     rows_c, rows_k = gen.sample(np.random.default_rng(4), n, batch=batch)
     g_ref = Graph(rng.integers(0, max(2, n_ref // 4),

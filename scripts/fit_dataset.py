@@ -112,6 +112,13 @@ def main(argv=None) -> int:
                 stats, noise=args.noise, calibrate=not args.no_calibrate)
         t_fit = time.time() - t0
     tracer.close()
+    # record which generation path produced the input dataset: backend
+    # names the PRNG stream, executor carries the byte-transparent knobs
+    # (pipeline depth, host workers, fused device-resident generation) —
+    # provenance for reproducing the exact run, never validated
+    man = source.ds.manifest
+    prov["generator"] = {"backend": man.backend, "mode": man.mode,
+                         "executor": man.executor}
     text = fit_engine.fit_to_json(fit, prov)
     tmp = args.out + ".tmp"
     with open(tmp, "w") as f:

@@ -101,6 +101,12 @@ def main(argv=None) -> int:
                     help="threads in the executor's host feature stage "
                          "(per-shard draws are independent pure "
                          "functions, so >1 stays deterministic)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run each shard's R-MAT descent as one fused "
+                         "jitted device program (and the feature decode "
+                         "too when a traceable generator rides along). "
+                         "Byte-identical to the staged path; recorded as "
+                         "provenance, never validated on --resume")
     ap.add_argument("--serial", action="store_true",
                     help="fully serial generation: pipeline depth 0 plus "
                          "no chunk double buffering (debug/benchmark "
@@ -153,7 +159,7 @@ def main(argv=None) -> int:
                          backend=args.backend, id_dtype=args.id_dtype,
                          pipeline_depth=(0 if args.serial
                                          else args.pipeline_depth),
-                         host_workers=args.host_workers,
+                         host_workers=args.host_workers, fused=args.fused,
                          tracer=tracer, metrics=metrics)
     except (KeyError, ValueError) as e:
         raise SystemExit(f"error: {e}")
@@ -163,7 +169,8 @@ def main(argv=None) -> int:
           f"(max {job.scheduler.max_shard_edges:,} edges/shard), "
           f"mode={args.mode}, backend={job.backend}, "
           f"pipeline_depth={job.pipeline_depth}, "
-          f"host_workers={job.host_workers}", file=sys.stderr)
+          f"host_workers={job.host_workers}, fused={job.fused}",
+          file=sys.stderr)
     t0 = time.time()
     try:
         with jaxprof.trace(args.jax_profile):

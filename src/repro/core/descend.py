@@ -130,3 +130,17 @@ def combine_ids_device(parts: IdParts, bits: int, dtype, prefix=None):
     if prefix is not None:
         out = out + (prefix.astype(dt) << bits)
     return out
+
+
+def narrow_ids(parts: IdParts, n_edges: int, dtype, prefix: int = 0,
+               bits: int = 0):
+    """In-graph finalize of one narrow (≤ 31-bit) id chunk: trim kernel
+    padding, cast to the contract dtype, add the chunk prefix shifted past
+    the ``bits`` suffix levels.  jit-embeddable — the fused generation
+    program (``datastream.source``) runs this per chunk inside one trace,
+    with the exact op order of the staged path (``astype`` then prefix
+    add), so the id values match the host-assembled stream bit for bit."""
+    out = parts.lo[:n_edges].astype(np.dtype(dtype))
+    if prefix:
+        out = out + (int(prefix) << int(bits))
+    return out

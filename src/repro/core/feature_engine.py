@@ -60,9 +60,15 @@ def batched_rows(fn: Callable, X: np.ndarray, batch: int,
     b = max(1, int(batch))
     n_blocks = math.ceil(n / b)
     pad = n_blocks * b - n
+    # full blocks are zero-copy views of X; only the final ragged block
+    # materializes a padded copy (previously the WHOLE input was copied
+    # through one np.concatenate just to round the tail up)
+    blocks = [X[i * b:(i + 1) * b] for i in range(n_blocks)]
     if pad:
-        X = np.concatenate([X, np.zeros((pad,) + X.shape[1:], X.dtype)])
-    outs = [call(X[i * b:(i + 1) * b], i) for i in range(n_blocks)]
+        tail = np.zeros((b,) + X.shape[1:], X.dtype)
+        tail[:b - pad] = blocks[-1]
+        blocks[-1] = tail
+    outs = [call(blk, i) for i, blk in enumerate(blocks)]
     if isinstance(outs[0], tuple):
         return tuple(np.concatenate([np.asarray(o[j]) for o in outs])[:n]
                      for j in range(len(outs[0])))

@@ -320,6 +320,26 @@ class GANFeatureGenerator:
         # default clamps to n to keep small in-memory draws cheap
         b = (max(1, int(batch)) if batch
              else max(1, min(int(self.cfg.sample_batch), n)))
+        _draw = self.block_draw(b)
+        conts, cats = [], []
+        for i in range(-(-n // b)):
+            c, k = _draw(self.params["g"], jax.random.fold_in(key, i))
+            conts.append(np.asarray(c))
+            cats.append(np.asarray(k))
+        return np.concatenate(conts)[:n], np.concatenate(cats)[:n]
+
+    def block_draw(self, batch: int):
+        """The fused per-block draw ``(params, key) → (cont, cat)`` for a
+        fixed ``batch`` row count: generator MLP + activation + Gumbel-max
+        decode in one jitted call, cached per batch size.
+
+        The callable is traceable — the fused device-generation program
+        (``datastream.source``) calls it *inside* its own jit, where the
+        inner jit inlines, so one block draw emits the exact same op
+        sequence (and therefore the same bits) whether driven from host
+        or embedded in a larger trace."""
+        assert self.params is not None, "fit first"
+        b = int(batch)
         if b not in self._sample_cache:
             decoder = self.codec.batched(b)
 
@@ -331,13 +351,7 @@ class GANFeatureGenerator:
                 return decoder.decode_traceable(raw, kd)
 
             self._sample_cache[b] = _draw
-        _draw = self._sample_cache[b]
-        conts, cats = [], []
-        for i in range(-(-n // b)):
-            c, k = _draw(self.params["g"], jax.random.fold_in(key, i))
-            conts.append(np.asarray(c))
-            cats.append(np.asarray(k))
-        return np.concatenate(conts)[:n], np.concatenate(cats)[:n]
+        return self._sample_cache[b]
 
 
 # ---------------------------------------------------------------------------

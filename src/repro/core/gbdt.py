@@ -4,13 +4,35 @@ The paper uses (RAPIDS) XGBoost with lr=0.1, max_depth=5, 100 estimators,
 alpha=10.  There is no TPU XGBoost, so we keep the *model family and
 hyper-parameters* and swap the implementation (DESIGN.md §2): histogram
 trees fit in numpy (evaluation-scale), prediction vectorized in JAX
-(generation-scale: flat arrays + ``fori_loop`` descent, jit/shard-friendly).
+(generation-scale).
+
+Inference is a **bin-quantized gather-free scan** (``_forest_scan`` /
+``_forest_scan_multi``): at pack time every split threshold is snapped
+back onto the training-time histogram-bin grid it came from, so at
+predict time each feature column is quantized ONCE to an int16 bin id
+(``#{edges < x}``, an O(f·n_bins) compare-reduce) and tree descent
+becomes integer compares on small (T, S) int arrays instead of
+gather-latency-bound float loads.  Levels 0–1 of each tree descend by
+predicated selects over the transposed bin matrix (two nodes: cheaper
+than any gather); deeper levels use flat 1-D gathers with
+``promise_in_bounds`` + sorted-index hints.  All trees run in one
+``lax.scan`` — and the classifier unrolls its class loop *inside* one
+jit so the quantization is shared across all C forests (an explicit
+``vmap`` over stacked forests measured ~2x slower per forest on CPU).
+
+The scan accumulates tree contributions in the same order as the
+original per-tree loop, so outputs are bit-identical to the unsharded
+packed predictor.  The pre-PR host-thread forest sharding
+(``_forest_shards`` + ``_pool``) is kept only as a documented fallback
+for models whose thresholds cannot be snapped onto a bin grid
+(``_binned is None`` — e.g. deserialized foreign forests).
 
 Squared loss; leaf values use XGBoost's L1(alpha)/L2(lambda) shrinkage:
 ``w = -sign(G)·max(|G|-α, 0) / (H + λ)``.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import functools
 import os
@@ -22,12 +44,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-#: CPU hosts split the packed forest across this many host threads (XLA's
-#: CPU gather barely multithreads: the tree descent is gather-latency
-#: bound, and concurrent half-forest scans overlap almost perfectly).
-#: The count is FIXED — not ``cpu_count`` — so the partial-sum order, and
-#: therefore the float32 output, is host-independent (datastream resumes
-#: promise byte-identical shards across machines).
+from repro.obs.trace import NULL_TRACER
+
+#: CPU hosts split the packed *fallback* forest across this many host
+#: threads (XLA's CPU gather barely multithreads: the float-gather tree
+#: descent is gather-latency bound, and concurrent half-forest scans
+#: overlap almost perfectly).  The count is FIXED — not ``cpu_count`` —
+#: so the partial-sum order, and therefore the float32 output, is
+#: host-independent across multi-core hosts.  Single-core hosts degrade
+#: to one shard (nothing to overlap; the pool dispatch is pure loss) —
+#: the float-sum change this implies is covered by the aligner feature
+#: stream marker (see ``datastream.service._features_meta``).
 _CPU_FOREST_SHARDS = 4
 #: engage threading only when rows × trees is big enough to amortize the
 #: extra dispatches
@@ -37,6 +64,16 @@ _POOL: Optional[ThreadPoolExecutor] = None
 _POOL_LOCK = threading.Lock()
 
 
+def _shutdown_pool() -> None:
+    """``atexit`` hook: stop the forest-shard worker threads so pytest /
+    CLI processes exit without waiting on a lingering non-daemon pool."""
+    global _POOL
+    with _POOL_LOCK:
+        pool, _POOL = _POOL, None
+    if pool is not None:
+        pool.shutdown(wait=False, cancel_futures=True)
+
+
 def _pool() -> ThreadPoolExecutor:
     global _POOL
     if _POOL is None:
@@ -44,12 +81,15 @@ def _pool() -> ThreadPoolExecutor:
             if _POOL is None:
                 _POOL = ThreadPoolExecutor(
                     max_workers=min(_CPU_FOREST_SHARDS, os.cpu_count() or 1))
+                atexit.register(_shutdown_pool)
     return _POOL
 
 
 def _forest_shards(n_rows: int, n_trees: int) -> int:
     if jax.default_backend() != "cpu":
         return 1          # accelerators want one fused call
+    if (os.cpu_count() or 1) <= 1:
+        return 1          # single-core host: thread dispatch is pure loss
     if n_rows * n_trees < _SHARD_MIN_WORK or n_trees < _CPU_FOREST_SHARDS:
         return 1
     return _CPU_FOREST_SHARDS
@@ -143,6 +183,156 @@ def _gain(G, H, cfg):
     return 0.5 * g1 * g1 / (H + cfg.lam)
 
 
+# ---------------------------------------------------------------------------
+# bin-quantized scan inference
+# ---------------------------------------------------------------------------
+
+#: never-right marker for leaf / inf-threshold nodes: any bin id compares
+#: ``<= _BIN_SENTINEL`` so the descent goes left, matching ``x > inf``
+#: (and NaN) semantics.  Chosen int16-safe and above any real bin count.
+_BIN_SENTINEL = 32000
+#: tree levels descended by predicated selects (≤ 2 nodes/level) before
+#: switching to flat gathers — the empirical CPU sweet spot.
+_SEL_LEVELS = 2
+
+
+def _pack_binned(trees, bins, depth: int):
+    """Snap a fitted forest onto its histogram-bin grid.
+
+    Returns ``{"E", "code", "leaf_bot"}`` device arrays, or ``None`` when
+    the forest cannot be represented (no features, too many features for
+    the 15-bit code split, a bin grid touching the sentinel, or a
+    threshold that is not on the grid — only possible for forests not fit
+    by this module).
+
+    * ``E`` (f, max_e) float32 — per-feature sorted bin edges, padded
+      with ``+inf``.  Quantizing x to ``#{edges < x}`` (strict) makes
+      ``bin(x) > bin_of(thr) ⟺ x > thr`` EXACT in float32, even with
+      duplicate edges, because ``bin_of(thr)`` is the *last* edge index
+      equal to the threshold.
+    * ``code`` (T, S) int32 — ``feature * 2^15 + bin_of(threshold)`` per
+      node, ``_BIN_SENTINEL`` in the low bits for never-right nodes.
+    * ``leaf_bot`` (T, 2^depth) float32 — bottom-level leaf values with
+      early leaves pushed down to all their descendants, so the descent
+      runs unconditionally to the bottom.
+    """
+    T = len(trees)
+    S = 2 ** (depth + 1) - 1
+    f = len(bins)
+    edges32 = [np.asarray(b, np.float32) for b in bins]
+    max_e = max((len(e) for e in edges32), default=0)
+    if T == 0 or f == 0 or f >= (1 << 16) or max_e >= _BIN_SENTINEL:
+        return None
+    E = np.full((f, max(max_e, 1)), np.inf, np.float32)
+    for j, e in enumerate(edges32):
+        E[j, :len(e)] = e
+    feat = np.stack([t.feature for t in trees]).astype(np.int32)
+    thr = np.stack([t.threshold for t in trees]).astype(np.float32)
+    leaf = np.stack([t.leaf for t in trees]).astype(np.float32)
+    isl = np.stack([t.is_leaf for t in trees])
+    n_int = 2 ** depth - 1
+    thrb = np.full((T, S), _BIN_SENTINEL, np.int32)
+    for t in range(T):
+        for s in range(n_int):
+            if isl[t, s] or not np.isfinite(thr[t, s]):
+                continue
+            j = feat[t, s]
+            b = int(np.searchsorted(edges32[j], thr[t, s], side="right")) - 1
+            if b < 0 or edges32[j][b] != thr[t, s]:
+                return None       # threshold off the bin grid
+            thrb[t, s] = b
+    # leaf push-down: an early leaf's value propagates to every
+    # bottom-level descendant, so stopping early == descending through
+    leaf_d, isl_d = leaf.copy(), isl.copy()
+    for s in range(n_int):
+        upd = isl_d[:, s]
+        for c in (2 * s + 1, 2 * s + 2):
+            leaf_d[:, c] = np.where(upd, leaf_d[:, s], leaf_d[:, c])
+            isl_d[:, c] = isl_d[:, c] | upd
+    code = feat * (1 << 15) + thrb
+    return {"E": jnp.asarray(E), "code": jnp.asarray(code),
+            "leaf_bot": jnp.asarray(leaf_d[:, n_int:])}
+
+
+def _quantize(X, E):
+    """(n, f) float32 → transposed (f, n) int16 bin ids + a flat view with
+    per-row offsets for the sorted flat-gather descent.
+
+    ``bin(x) = #{edges < x}`` = ``searchsorted(edges, x, 'left')`` —
+    O(n·f·log B) instead of the O(n·f·B) broadcast-compare, which at
+    256 bins was ~a third of the whole forest-scan block time.  The
+    +inf padding of E sorts last, so it never affects the count.  Bin
+    ids are uint8 whenever the grid allows (≤ 255 edges ⇒ ids ≤ 255):
+    the flat-gather table is random-accessed per tree level, and
+    halving it keeps more of the block resident in cache.  The descent
+    compares in int32 either way, so the dtype never changes a bit."""
+    dt = jnp.uint8 if E.shape[1] <= 255 else jnp.int16
+    XbT = jax.vmap(
+        lambda e, x: jnp.searchsorted(e, x, side="left"))(E, X.T)
+    XbT = XbT.astype(dt)
+    rowoff = jnp.arange(X.shape[0], dtype=jnp.int32) * X.shape[1]
+    return XbT, XbT.T.reshape(-1), rowoff
+
+
+def _scan_descent(code, leaf_bot, XbT, Xf, rowoff, base, lr, depth, n):
+    """One forest's scan over (T, S) codes; bit-identical accumulation
+    order to the original per-tree loop (carry + lr*leaf per tree)."""
+
+    def one_tree(carry, t):
+        cd, lb = t
+        idx = jnp.zeros(n, jnp.int32)
+        for k in range(depth):
+            basei = (1 << k) - 1
+            if k < _SEL_LEVELS:
+                # ≤ 2 nodes: a predicated select over contiguous columns
+                # of the transposed bin matrix beats any gather
+                d = jnp.zeros(n, bool)
+                for j in range(1 << k):
+                    c = cd[basei + j]
+                    col = jax.lax.dynamic_index_in_dim(
+                        XbT, c >> 15, axis=0, keepdims=False)
+                    cmp = col.astype(jnp.int32) > (c & 0x7FFF)
+                    d = cmp if k == 0 else jnp.where(idx == j, cmp, d)
+                idx = 2 * idx + d
+            else:
+                # row windows of Xf never overlap → indices are sorted
+                c = cd.at[basei + idx].get(mode="promise_in_bounds")
+                x = Xf.at[rowoff + (c >> 15)].get(
+                    mode="promise_in_bounds", indices_are_sorted=True)
+                idx = 2 * idx + (x.astype(jnp.int32) > (c & 0x7FFF))
+        return carry + lr * lb.at[idx].get(mode="promise_in_bounds"), None
+
+    total, _ = jax.lax.scan(one_tree, jnp.full(n, base, jnp.float32),
+                            (code, leaf_bot))
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_scan(code, leaf_bot, X, E, base, lr, depth):
+    """Single-output bin-quantized forest: quantize once, scan all trees."""
+    XbT, Xf, rowoff = _quantize(X, E)
+    return _scan_descent(code, leaf_bot, XbT, Xf, rowoff, base, lr, depth,
+                         X.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _forest_scan_multi(code, leaf_bot, X, E, base, lr, depth):
+    """(C, T, S) one-vs-rest forests → (n, C) scores in ONE jit call.
+
+    The class loop unrolls in Python *inside* the trace so every class
+    shares one quantization of X; an explicit ``vmap`` over the stacked
+    forests measured ~2x slower per forest on CPU."""
+    q = _quantize(X, E)
+    cols = [_scan_descent(code[c], leaf_bot[c], *q, base[c], lr, depth,
+                          X.shape[0])
+            for c in range(code.shape[0])]
+    return jnp.stack(cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# fallback float-gather inference (pre-binned packing)
+# ---------------------------------------------------------------------------
+
 def _forest_predict_core(feature, threshold, leaf, is_leaf, X, base, lr,
                          depth):
     """Scan the packed (T, S) forest arrays over all trees: one descent
@@ -203,6 +393,8 @@ class GBDTRegressor:
         self.base = 0.0
         self.trees: List[_Tree] = []
         self._packed = None
+        self._binned = None
+        self.tracer = NULL_TRACER   # set by GBDTAligner / the executor
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "GBDTRegressor":
         cfg = self.cfg
@@ -228,14 +420,31 @@ class GBDTRegressor:
             "leaf": jnp.asarray(np.stack([t.leaf for t in self.trees])),
             "is_leaf": jnp.asarray(np.stack([t.is_leaf for t in self.trees])),
         }
+        self._binned = _pack_binned(self.trees, getattr(self, "bins", []),
+                                    self.cfg.max_depth)
 
     def predict(self, X) -> jnp.ndarray:
-        """Vectorized JAX prediction through the packed forest (jit
-        compiled once per row-count; use ``feature_engine.batched_rows``
-        for fixed-shape streaming).  On CPU the forest is split across
-        host threads (see ``_forest_shards``)."""
-        pk = self._packed
+        """Vectorized JAX prediction: the bin-quantized scan when the
+        forest snapped onto its bin grid at pack time (always, for
+        forests fit here), else the float-gather fallback with
+        host-thread forest sharding.  Jit compiled once per row-count —
+        use ``feature_engine.batched_rows`` for fixed-shape streaming."""
         X = jnp.asarray(X, jnp.float32)
+        bn = self._binned
+        if bn is not None:
+            with self.tracer.span("gbdt.scan", rows=int(X.shape[0])):
+                out = _forest_scan(bn["code"], bn["leaf_bot"], X, bn["E"],
+                                   jnp.float32(self.base),
+                                   jnp.float32(self.cfg.lr),
+                                   self.cfg.max_depth)
+                out.block_until_ready()
+            return out
+        return self._predict_sharded(X)
+
+    def _predict_sharded(self, X) -> jnp.ndarray:
+        """Fallback float-gather path; on multi-core CPU the forest is
+        split across host threads (see ``_forest_shards``)."""
+        pk = self._packed
         T = pk["feature"].shape[0]
         shards = _forest_shards(X.shape[0], T)
         lr = jnp.float32(self.cfg.lr)
@@ -280,14 +489,18 @@ class GBDTClassifier:
     """One-vs-rest stack of regressors on one-hot targets; softmax combine.
 
     After ``fit`` the per-class forests are stacked into (C, T, S) arrays
-    so ``predict``/``predict_proba`` score every class in one jit call
-    (``_forest_predict_multi``) instead of C sequential tree loops."""
+    so ``predict``/``predict_proba`` score every class in one jit call —
+    the bin-quantized ``_forest_scan_multi`` (shared quantization,
+    Python-unrolled class loop) when every class forest snapped onto the
+    common bin grid, else the float-gather ``_forest_predict_multi``."""
 
     def __init__(self, n_classes: int, cfg: Optional[GBDTConfig] = None):
         self.cfg = cfg if cfg is not None else GBDTConfig()
         self.n_classes = n_classes
         self.models = [GBDTRegressor(self.cfg) for _ in range(n_classes)]
         self._packed = None
+        self._binned = None
+        self.tracer = NULL_TRACER   # set by GBDTAligner / the executor
 
     def fit(self, X, y):
         onehot = np.eye(self.n_classes, dtype=np.float32)[np.asarray(y, np.int64)]
@@ -301,12 +514,37 @@ class GBDTClassifier:
             k: jnp.stack([m._packed[k] for m in self.models])
             for k in ("feature", "threshold", "leaf", "is_leaf")}
         self._base = jnp.asarray([m.base for m in self.models], jnp.float32)
+        bns = [m._binned for m in self.models]
+        self._binned = None
+        if bns and all(b is not None for b in bns):
+            # all class forests were fit on the same X, so they share one
+            # bin grid; verify rather than trust (foreign model stacks)
+            E0 = np.asarray(bns[0]["E"])
+            if all(np.array_equal(np.asarray(b["E"]), E0) for b in bns[1:]):
+                self._binned = {
+                    "E": bns[0]["E"],
+                    "code": jnp.stack([b["code"] for b in bns]),
+                    "leaf_bot": jnp.stack([b["leaf_bot"] for b in bns])}
 
     def predict_scores(self, X) -> jnp.ndarray:
-        """(n, C) raw one-vs-rest scores, all classes in one scan (CPU:
-        tree axis split across host threads, as in the regressor)."""
-        pk = self._packed
+        """(n, C) raw one-vs-rest scores, all classes in one scan."""
         X = jnp.asarray(X, jnp.float32)
+        bn = self._binned
+        if bn is not None:
+            with self.tracer.span("gbdt.scan", rows=int(X.shape[0]),
+                                  classes=self.n_classes):
+                out = _forest_scan_multi(bn["code"], bn["leaf_bot"], X,
+                                         bn["E"], self._base,
+                                         jnp.float32(self.cfg.lr),
+                                         self.cfg.max_depth)
+                out.block_until_ready()
+            return out
+        return self._predict_scores_sharded(X)
+
+    def _predict_scores_sharded(self, X) -> jnp.ndarray:
+        """Fallback float-gather path (CPU: tree axis split across host
+        threads, as in the regressor)."""
+        pk = self._packed
         T = pk["feature"].shape[1]
         # the shards slice the per-class tree axis (T), so the
         # too-few-trees guard must see T; the work estimate still counts

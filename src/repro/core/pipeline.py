@@ -240,7 +240,7 @@ class SyntheticGraphPipeline:
                           resume: bool = False, mode: str = "chunks",
                           backend: Optional[str] = None, id_dtype=None,
                           pipeline_depth: int = 2, host_workers: int = 1,
-                          tracer=None, metrics=None):
+                          fused: bool = False, tracer=None, metrics=None):
         """Materialize the generated graph to a sharded on-disk dataset
         instead of host memory (see ``repro.datastream``) — the path for
         outputs that exceed RAM.  Returns a ``ShardedGraphDataset``.
@@ -264,6 +264,12 @@ class SyntheticGraphPipeline:
         end-to-end and ``gen_overlap`` (busy/wall) reports how much the
         pipeline actually hid.
 
+        ``fused=True`` runs each shard's R-MAT descent — and, when the
+        feature generator exposes a traceable ``block_draw`` (the GAN
+        path), the Gumbel-max feature decode too — as one jitted device
+        program; the host stage shrinks to alignment + write.  Output
+        stays byte-identical to the staged path.
+
         ``tracer``/``metrics`` (a ``repro.obs`` ``Tracer`` /
         ``MetricsRegistry``) flow through the executor into every stage;
         attach a sink (e.g. ``JsonlSink``) before calling to capture the
@@ -286,8 +292,8 @@ class SyntheticGraphPipeline:
                          k_pref=k_pref, double_buffered=double_buffered,
                          mode=mode, features=features, backend=backend,
                          id_dtype=id_dtype, pipeline_depth=pipeline_depth,
-                         host_workers=host_workers, tracer=tracer,
-                         metrics=metrics)
+                         host_workers=host_workers, fused=fused,
+                         tracer=tracer, metrics=metrics)
         job.run(resume=resume)
         self.timings.gen_struct_s = job.timings["gen_struct_s"]
         self.timings.gen_feat_s = job.timings["gen_feat_s"]

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descend import (LO_BITS, IdParts, check_id_capacity,
-                                combine_ids, descend)
+                                combine_ids, descend, narrow_ids)
 from repro.kernels import rmat_sample as rs
 
 #: smallest Pallas block the engine will launch (lane-width friendly)
@@ -83,7 +83,7 @@ def _finalize(src: IdParts, dst: IdParts, n: int, m: int, dt: np.dtype,
     path needs no jax x64.
     """
     if dt.itemsize <= 4:
-        return src.lo[:n_edges].astype(dt), dst.lo[:n_edges].astype(dt)
+        return narrow_ids(src, n_edges, dt), narrow_ids(dst, n_edges, dt)
     return (combine_ids(src, n, dt)[:n_edges],
             combine_ids(dst, m, dt)[:n_edges])
 

@@ -144,9 +144,18 @@ class ShardExecutor:
     # -- stages ------------------------------------------------------------
     def _feature_task(self, rec: ShardRecord,
                       arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        cont, cat = self.features.sample_for_shard(
-            self.seed, rec.shard_id, arrays["src"], arrays["dst"],
-            self.bipartite, batch=self.feature_batch)
+        if "cont" in arrays:
+            # a fused source already decoded the feature rows on device
+            # inside the struct program — the host stage shrinks to
+            # alignment (+ the final dtype casts)
+            cont, cat = self.features.align_for_shard(
+                self.seed, rec.shard_id, arrays["src"], arrays["dst"],
+                arrays["cont"], arrays["cat"], self.bipartite,
+                batch=self.feature_batch)
+        else:
+            cont, cat = self.features.sample_for_shard(
+                self.seed, rec.shard_id, arrays["src"], arrays["dst"],
+                self.bipartite, batch=self.feature_batch)
         arrays["cont"] = np.asarray(cont, np.float32)
         arrays["cat"] = np.asarray(cat, np.int32)
         return arrays

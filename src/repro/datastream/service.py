@@ -86,6 +86,7 @@ class DatasetJob:
                  features: Optional[FeatureSpec] = None,
                  backend: Optional[str] = None, id_dtype=None,
                  pipeline_depth: int = 2, host_workers: int = 1,
+                 fused: bool = False,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None):
         assert mode in ("chunks", "device_steps"), mode
@@ -97,6 +98,11 @@ class DatasetJob:
         self.double_buffered = double_buffered
         self.mode = mode
         self.features = features
+        # fused device-resident generation: the source runs struct descent
+        # (and, for traceable generators, the whole feature decode) in one
+        # jitted program per shard signature.  Byte-transparent like the
+        # executor knobs — recorded as provenance, never validated.
+        self.fused = bool(fused)
         self.pipeline_depth = int(pipeline_depth)
         self.host_workers = int(host_workers)
         self.tracer = tracer
@@ -153,11 +159,15 @@ class DatasetJob:
             if self.mode == "chunks":
                 self._source = ChunkShardSource(
                     self.scheduler, self.backend, self.dtype,
-                    double_buffered=self.double_buffered)
+                    double_buffered=self.double_buffered,
+                    fused=self.fused, features=self.features,
+                    seed=self.seed, feature_batch=self._feature_batch())
             else:
                 self._source = DeviceStepShardSource(
                     self.fit, self.scheduler.thetas, self.shard_edges,
-                    self.seed, self.dtype)
+                    self.seed, self.dtype,
+                    fused=self.fused, features=self.features,
+                    feature_batch=self._feature_batch())
         return self._source
 
     def _feature_batch(self) -> Optional[int]:
@@ -198,6 +208,14 @@ class DatasetJob:
                 or engine_batched(self.features.aligner, "align"):
             meta.update(batch=self._feature_batch(),
                         device=jax.default_backend())
+        # an aligner's stream marker names its inference float-sum order
+        # (GBDTAligner bumps it when the engine's accumulation changes,
+        # e.g. the thread-sharded loop → bin-quantized scan move): a
+        # resume across markers would silently alter feature bytes, so it
+        # validates like backend/dtype
+        marker = getattr(self.features.aligner, "stream_marker", None)
+        if marker is not None:
+            meta.update(aligner_stream=str(marker))
         return meta
 
     # -- plan --------------------------------------------------------------
@@ -228,7 +246,8 @@ class DatasetJob:
                    else None),
             features=self._features_meta(),
             executor={"pipeline_depth": self.pipeline_depth,
-                      "host_workers": self.host_workers},
+                      "host_workers": self.host_workers,
+                      "fused": self.fused},
             shards=shards)
         os.makedirs(self.out_dir, exist_ok=True)
         manifest.save(self.out_dir)
@@ -356,5 +375,6 @@ class DatasetJob:
         # executor knobs are byte-transparent provenance: refresh them to
         # this run's values so the compacted manifest reflects reality
         manifest.executor = {"pipeline_depth": self.pipeline_depth,
-                             "host_workers": self.host_workers}
+                             "host_workers": self.host_workers,
+                             "fused": self.fused}
         return manifest

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rmat
-from repro.core.descend import combine_ids
+from repro.core.descend import combine_ids, narrow_ids
 from repro.core.sampler import get_backend
 from repro.core.structure import KroneckerFit
 from repro.datastream.scheduler import ChunkScheduler
@@ -84,6 +84,35 @@ class FeatureSpec:
         return {"n_cont": int(schema.n_cont),
                 "cat_cards": [int(c) for c in schema.cat_cards]}
 
+    def _push_tracer(self) -> None:
+        """Propagate this spec's tracer into the aligner (and through it
+        the per-column GBDT models) so ``gbdt.scan`` spans land on the
+        run timeline.  Duck-typed aligners without the attribute are
+        left alone."""
+        if (self.aligner is not None
+                and getattr(self.aligner, "tracer", None)
+                not in (self.tracer,)):
+            try:
+                self.aligner.tracer = self.tracer
+            except AttributeError:
+                pass
+
+    def block_draw(self, batch: int):
+        """The generator's fused traceable per-block draw (see
+        ``GANFeatureGenerator.block_draw``), or ``None`` for host-only
+        generators (KDE/Random) — in which case the fused sources fall
+        back to struct-only fusion + the staged host feature stage."""
+        fn = getattr(self.generator, "block_draw", None)
+        return fn(batch) if callable(fn) else None
+
+    def feature_key_int(self, seed: int, shard_id: int) -> int:
+        """The 63-bit seed the staged path's ``generator.sample`` draws
+        first for this shard — the fused program must consume the exact
+        same value so its device-side feature stream matches byte for
+        byte."""
+        rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
+        return int(rng.integers(2 ** 63))
+
     def sample_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
                          dst: np.ndarray, bipartite: bool,
                          batch: Optional[int] = None):
@@ -93,6 +122,7 @@ class FeatureSpec:
         subgraph (degrees/PageRank *within* the shard) — a bounded-memory
         approximation of the global §3.4 alignment.
         """
+        self._push_tracer()
         rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
         b = batch or self.batch
         # feat_s/align_s mirror the span durations so callers that only
@@ -115,6 +145,32 @@ class FeatureSpec:
             dt_align = sp.dur or (time.perf_counter() - t0)
         with self._lock:
             self.feat_s += dt_feat
+            self.align_s += dt_align
+        return cont, cat
+
+    def align_for_shard(self, seed: int, shard_id: int, src: np.ndarray,
+                        dst: np.ndarray, cont: np.ndarray, cat: np.ndarray,
+                        bipartite: bool, batch: Optional[int] = None):
+        """Host half of the *fused* path: the feature rows were already
+        decoded on device inside the struct program (which consumed the
+        shard's ``feature_key_int`` seed), so this replays the staged rng
+        stream up to the alignment draw — burning the generator's one
+        ``integers(2**63)`` — and runs alignment only.  Byte-identical to
+        ``sample_for_shard`` on the same shard."""
+        self._push_tracer()
+        rng = np.random.default_rng([seed, _FEATURE_SALT, shard_id])
+        if len(src):
+            rng.integers(2 ** 63)   # consumed on-device by the fused draw
+        b = batch or self.batch
+        dt_align = 0.0
+        if self.aligner is not None and len(src):
+            t0 = time.perf_counter()
+            with self.tracer.span("align", shard=shard_id) as sp:
+                g_local = compact_subgraph(src, dst, bipartite)
+                cont, cat = call_with_optional_kwargs(
+                    self.aligner.align, g_local, cont, cat, rng, batch=b)
+            dt_align = sp.dur or (time.perf_counter() - t0)
+        with self._lock:
             self.align_s += dt_align
         return cont, cat
 
@@ -141,19 +197,146 @@ class ShardSource:
 
 
 class ChunkShardSource(ShardSource):
-    """θ-weighted prefix-chunk sampling through the engine backend."""
+    """θ-weighted prefix-chunk sampling through the engine backend.
+
+    ``fused=True`` replaces the per-chunk dispatch/flush pump with ONE
+    jitted program per shard *signature* (the tuple of chunk sizes +
+    feature block count): every chunk's backend descent runs in a single
+    trace, narrow ids are finalized and concatenated in-graph, and — when
+    ``features`` carries a traceable generator (``block_draw``) — the
+    Gumbel-max feature decode for the whole shard runs in the same
+    program, so neither edge ids nor raw feature draws round-trip through
+    host numpy between the struct and feature stages.  The emitted values
+    are byte-identical to the staged path: per-chunk keys, feature seed,
+    block shapes and op order are all replayed exactly.
+    """
 
     name = "chunks"
 
     def __init__(self, scheduler: ChunkScheduler, backend: str,
-                 dtype, double_buffered: bool = True):
+                 dtype, double_buffered: bool = True, fused: bool = False,
+                 features: Optional[FeatureSpec] = None, seed: int = 0,
+                 feature_batch: Optional[int] = None):
         self.scheduler = scheduler
         self.fit: KroneckerFit = scheduler.fit
         self.backend = backend
         self.dtype = np.dtype(dtype)
         self.double_buffered = double_buffered
+        self.fused = bool(fused)
+        self.features = features
+        self.seed = int(seed)
+        self.feature_batch = feature_batch
+        self._fused_cache: Dict[Any, Any] = {}   # signature -> jitted fn
 
     def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
+        if self.fused:
+            return self._generate_fused(rec)
+        return self._generate_staged(rec)
+
+    # -- fused: one program per shard signature -----------------------------
+    def _feature_plan(self, n_rows: int):
+        """(block_draw, batch, n_blocks) for the fused program — or
+        ``(None, 0, 0)`` when there is no traceable generator (struct-only
+        fusion; the executor's host stage keeps the staged feature draw)."""
+        if self.features is None or n_rows == 0:
+            return None, 0, 0
+        b = int(self.feature_batch or self.features.batch or n_rows)
+        draw = self.features.block_draw(b)
+        if draw is None:
+            return None, 0, 0
+        return draw, b, -(-n_rows // b)
+
+    def _build_fused(self, sizes, n_blocks: int, b: int, wide: bool):
+        """Trace-once program for one shard signature.  Chunk prefixes
+        vary per shard under one signature, so they enter as *traced*
+        pre-shifted scalars, not trace constants."""
+        sched, fit = self.scheduler, self.fit
+        be = get_backend(self.backend)
+        suffix_np = np.asarray(sched.thetas)[sched.k_pref:]
+        n_s = fit.n - sched.k_pref
+        m_s = fit.m - sched.k_pref
+        dt = self.dtype
+        draw = self.features.block_draw(b) if n_blocks else None
+
+        def program(keys, spre, dpre, params, fkey):
+            suffix = jnp.asarray(suffix_np, jnp.float32)
+            srcs, dsts, parts = [], [], []
+            for i, ne in enumerate(sizes):
+                sp, dp = be.sample_parts(keys[i], suffix, n_s, m_s, ne)
+                if wide:
+                    # (hi, lo) words stay per-chunk; the host combines
+                    # them without jax x64, exactly like the staged flush
+                    parts.append((sp, dp))
+                else:
+                    srcs.append(narrow_ids(sp, ne, dt) + spre[i])
+                    dsts.append(narrow_ids(dp, ne, dt) + dpre[i])
+            edges = (tuple(parts) if wide
+                     else (jnp.concatenate(srcs), jnp.concatenate(dsts)))
+            if draw is None:
+                return edges, None
+            conts, cats = [], []
+            for i in range(n_blocks):
+                c, k = draw(params, jax.random.fold_in(fkey, i))
+                conts.append(c)
+                cats.append(k)
+            return edges, (jnp.concatenate(conts), jnp.concatenate(cats))
+
+        return jax.jit(program)
+
+    def _generate_fused(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
+        sched = self.scheduler
+        dt = self.dtype
+        chunks = [sched.chunk(i) for i in rec.chunk_indices]
+        sizes = tuple(ck.n_edges for ck in chunks)
+        wide = dt.itemsize > 4
+        n_s = self.fit.n - sched.k_pref
+        m_s = self.fit.m - sched.k_pref
+        draw, b, n_blocks = self._feature_plan(rec.n_edges)
+        sig = (sizes, n_blocks, b, wide)
+        fn = self._fused_cache.get(sig)
+        if fn is None:
+            fn = self._fused_cache[sig] = self._build_fused(
+                sizes, n_blocks, b, wide)
+        keys = tuple(sched.key_for(ck) for ck in chunks)
+        if wide:
+            spre = dpre = None
+        else:
+            spre = jnp.asarray([ck.src_prefix << n_s for ck in chunks],
+                               jnp.int32)
+            dpre = jnp.asarray([ck.dst_prefix << m_s for ck in chunks],
+                               jnp.int32)
+        if n_blocks:
+            fkey = jax.random.PRNGKey(
+                self.features.feature_key_int(self.seed, rec.shard_id))
+            params = self.features.generator.params["g"]
+        else:
+            fkey = params = None
+        with self.tracer.span("struct.fused", shard=rec.shard_id,
+                              chunks=len(chunks), feature_blocks=n_blocks):
+            with jaxprof.annotation("struct.fused"):
+                edges, feats = jax.device_get(
+                    fn(keys, spre, dpre, params, fkey))
+                if wide:
+                    src_buf = np.empty(rec.n_edges, dt)
+                    dst_buf = np.empty(rec.n_edges, dt)
+                    off = 0
+                    for ck, (sp, dp) in zip(chunks, edges):
+                        src_buf[off: off + ck.n_edges] = combine_ids(
+                            sp, n_s, dt, prefix=ck.src_prefix)[: ck.n_edges]
+                        dst_buf[off: off + ck.n_edges] = combine_ids(
+                            dp, m_s, dt, prefix=ck.dst_prefix)[: ck.n_edges]
+                        off += ck.n_edges
+                    arrays = {"src": src_buf, "dst": dst_buf}
+                else:
+                    arrays = {"src": np.asarray(edges[0]),
+                              "dst": np.asarray(edges[1])}
+        if feats is not None:
+            arrays["cont"] = np.asarray(feats[0])[: rec.n_edges]
+            arrays["cat"] = np.asarray(feats[1])[: rec.n_edges]
+        return arrays
+
+    # -- staged: double-buffered per-chunk pump -----------------------------
+    def _generate_staged(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
         """Double-buffered chunk loop into a preallocated shard buffer.
 
         Wide (int64) ids dispatch the backend's device-resident
@@ -215,13 +398,20 @@ class DeviceStepShardSource(ShardSource):
     name = "device_steps"
 
     def __init__(self, fit: KroneckerFit, thetas: np.ndarray,
-                 shard_edges: int, seed: int, dtype):
+                 shard_edges: int, seed: int, dtype,
+                 fused: bool = False,
+                 features: Optional[FeatureSpec] = None,
+                 feature_batch: Optional[int] = None):
         self.fit = fit
         self.thetas = np.asarray(thetas)
         self.shard_edges = int(shard_edges)
         self.seed = int(seed)
         self.dtype = np.dtype(dtype)
+        self.fused = bool(fused)
+        self.features = features
+        self.feature_batch = feature_batch
         self._step = None
+        self._fused_steps: Dict[int, Any] = {}   # n_blocks -> jitted step
 
     def _setup(self):
         """Build the mesh + jitted step function once per source: every
@@ -258,14 +448,65 @@ class DeviceStepShardSource(ShardSource):
 
         return (step, n_dev)
 
+    def _feature_plan(self, n_rows: int):
+        """Mirror of ``ChunkShardSource._feature_plan``: the fused step
+        only engages for traceable generators."""
+        if self.features is None or n_rows == 0:
+            return None, 0, 0
+        b = int(self.feature_batch or self.features.batch or n_rows)
+        draw = self.features.block_draw(b)
+        if draw is None:
+            return None, 0, 0
+        return draw, b, -(-n_rows // b)
+
+    def _fused_step(self, n_blocks: int, b: int):
+        """One jitted program per feature-block count (the struct shapes
+        are step-invariant; only the ragged last shard re-traces): mesh
+        ``device_generate`` + the whole shard's feature decode in a
+        single trace.  The staged step is reused as a sub-program —
+        jit-in-jit inlines — so the edge stream is unchanged."""
+        fn = self._fused_steps.get(n_blocks)
+        if fn is None:
+            step, _ = self._setup()
+            draw = self.features.block_draw(b)
+
+            def fused(seeds, params, fkey):
+                src, dst = step(seeds)
+                conts, cats = [], []
+                for i in range(n_blocks):
+                    c, k = draw(params, jax.random.fold_in(fkey, i))
+                    conts.append(c)
+                    cats.append(k)
+                return ((src.reshape(-1), dst.reshape(-1)),
+                        (jnp.concatenate(conts), jnp.concatenate(cats)))
+
+            fn = self._fused_steps[n_blocks] = jax.jit(fused)
+        return fn
+
     def generate(self, rec: ShardRecord) -> Dict[str, np.ndarray]:
         from repro.core.distributed_gen import step_seeds
 
         step, n_dev = self._setup()
-        with self.tracer.span("struct.device_step", shard=rec.shard_id):
-            with jaxprof.annotation("struct.device_step"):
-                seeds = step_seeds(self.seed, rec.shard_id, n_dev)
-                src, dst = step(jnp.asarray(seeds))
+        draw, b, n_blocks = self._feature_plan(rec.n_edges) \
+            if self.fused else (None, 0, 0)
+        span = "struct.fused" if n_blocks else "struct.device_step"
+        with self.tracer.span(span, shard=rec.shard_id):
+            with jaxprof.annotation(span):
+                seeds = jnp.asarray(step_seeds(self.seed, rec.shard_id,
+                                               n_dev))
+                if n_blocks:
+                    fkey = jax.random.PRNGKey(
+                        self.features.feature_key_int(self.seed,
+                                                      rec.shard_id))
+                    params = self.features.generator.params["g"]
+                    fn = self._fused_step(n_blocks, b)
+                    (src, dst), (cont, cat) = jax.device_get(
+                        fn(seeds, params, fkey))
+                    return {"src": np.asarray(src)[: rec.n_edges],
+                            "dst": np.asarray(dst)[: rec.n_edges],
+                            "cont": np.asarray(cont)[: rec.n_edges],
+                            "cat": np.asarray(cat)[: rec.n_edges]}
+                src, dst = step(seeds)
                 src = np.asarray(jax.device_get(src)).reshape(-1)
                 dst = np.asarray(jax.device_get(dst)).reshape(-1)
         return {"src": src[: rec.n_edges], "dst": dst[: rec.n_edges]}

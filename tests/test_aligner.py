@@ -124,6 +124,30 @@ def test_classifier_packed_predict_matches_np(rng):
                                m.predict_proba_np(X), rtol=1e-4, atol=1e-5)
 
 
+def test_gbdt_bin_scan_matches_np_and_sharded_fallback(rng):
+    """The bin-quantized gather-free scan is the default inference path:
+    it must engage after fit (thresholds land on histogram-bin edges),
+    match the exact numpy walk closely, and be *bit-identical* to the
+    thread-sharded float-compare fallback (same per-tree accumulation
+    order — the property the aligner's stream marker pins)."""
+    X = rng.normal(0, 1, (3000, 5)).astype(np.float32)
+    y = (2 * X[:, 0] + np.sin(3 * X[:, 1]) - X[:, 3]
+         + rng.normal(0, 0.1, 3000))
+    m = GBDTRegressor(GBDTConfig(n_rounds=25, max_depth=5)).fit(X, y)
+    assert m._binned is not None, "scan path did not engage"
+    out = np.asarray(m.predict(X))
+    np.testing.assert_allclose(out, m.predict_np(X), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(out, np.asarray(m._predict_sharded(X)))
+    # classifier: one multi-class scan program, same guarantees
+    yc = (y > np.median(y)).astype(np.int32) + (X[:, 2] > 1)
+    c = GBDTClassifier(3, GBDTConfig(n_rounds=10, max_depth=4)).fit(X, yc)
+    assert c._binned is not None
+    scores = np.asarray(c.predict_scores(X))
+    np.testing.assert_array_equal(
+        scores, np.asarray(c._predict_scores_sharded(X)))
+    np.testing.assert_array_equal(scores.argmax(1), c.predict_np(X))
+
+
 def test_batched_predict_matches_unbatched(rng):
     from repro.core.feature_engine import batched_rows
     X = rng.normal(0, 1, (1000, 4)).astype(np.float32)
@@ -136,6 +160,30 @@ def test_batched_predict_matches_unbatched(rng):
                                m.predict_np(X[:700]), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(batched_rows(m.predict, X[:10], 512),
                                m.predict_np(X[:10]), rtol=1e-4, atol=1e-4)
+
+
+def test_batched_rows_full_blocks_are_zero_copy_views(rng):
+    """Only the padded tail may copy: every full block must be a view of
+    the input (the old driver round-tripped the WHOLE input through one
+    np.concatenate whenever the tail needed padding)."""
+    from repro.core.feature_engine import batched_rows
+    X = rng.normal(size=(1000, 3)).astype(np.float32)
+    seen = []
+
+    def fn(blk):
+        seen.append(blk)
+        return blk[:, 0]
+
+    np.testing.assert_array_equal(batched_rows(fn, X, 256), X[:, 0])
+    assert len(seen) == 4
+    assert all(np.shares_memory(b, X) for b in seen[:-1])
+    assert not np.shares_memory(seen[-1], X)      # padded tail copies
+    # exact multiple: no tail, every block a view
+    seen.clear()
+    np.testing.assert_array_equal(batched_rows(fn, X[:512], 256),
+                                  X[:512, 0])
+    assert len(seen) == 2
+    assert all(np.shares_memory(b, X) for b in seen)
 
 
 def test_aligner_fit_tiny_n_has_finite_quality():

@@ -396,6 +396,77 @@ def test_pipelined_golden_equals_serial_device_steps(tmp_path):
     assert _manifest_sans_executor(a) == _manifest_sans_executor(b)
 
 
+# -- fused device-resident generation ----------------------------------------
+
+#: small fit for the fused golden tests: the fused program compiles once
+#: per distinct shard chunk-shape, so keep the shard count low.  E is NOT
+#: a multiple of shard_edges ⇒ the last shard is ragged.
+FIT_FUSED = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=10, m=10,
+                         E=14_000)
+
+
+def _gan_gbdt_spec(rng, batch=None):
+    """A fitted GAN generator + GBDT aligner: the fully fusable feature
+    stage (``GANFeatureGenerator.block_draw`` is traceable, so ``fused``
+    runs R-MAT descent AND Gumbel-max feature decode in one jitted
+    program per block; the GBDT alignment stays on the host stage)."""
+    from repro.core.aligner import AlignerConfig, GBDTAligner
+    from repro.core.features import GANConfig, GANFeatureGenerator
+    from repro.core.gbdt import GBDTConfig
+    from repro.graph.ops import Graph
+    from repro.tabular.schema import infer_schema
+    cont = rng.normal(size=(400, 2)).astype(np.float32)
+    cat = rng.integers(0, 3, size=(400, 1)).astype(np.int32)
+    schema = infer_schema(cont, cat)
+    gen = GANFeatureGenerator(schema, GANConfig(batch=64)).fit(
+        cont, cat, steps=5, seed=0)
+    g = Graph(rng.integers(0, 64, 400).astype(np.int32),
+              rng.integers(0, 64, 400).astype(np.int32), 64, 64)
+    al = GBDTAligner(schema, AlignerConfig(
+        gbdt=GBDTConfig(n_rounds=4, max_depth=3)), kind="edge").fit(
+            g, cont, cat)
+    return FeatureSpec(gen, al, batch=batch)
+
+
+def test_fused_golden_equals_staged_chunks_with_features(tmp_path, rng):
+    """Tentpole golden-seed byte identity: fused device-resident
+    generation (one jitted program per block running struct descent +
+    feature decode) must produce the exact bytes of the staged path —
+    shards AND manifest, modulo the provenance-only executor knobs."""
+    spec = _gan_gbdt_spec(rng, batch=1024)
+    a, b = str(tmp_path / "staged"), str(tmp_path / "fused")
+    DatasetJob(FIT_FUSED, a, shard_edges=4096, seed=0, features=spec).run()
+    DatasetJob(FIT_FUSED, b, shard_edges=4096, seed=0, features=spec,
+               fused=True).run()
+    assert _file_hashes(a) == _file_hashes(b)
+    assert _manifest_sans_executor(a) == _manifest_sans_executor(b)
+    assert ShardedGraphDataset(b).verify(deep=True) == []
+
+
+def test_fused_golden_equals_staged_device_steps(tmp_path, rng):
+    spec = _gan_gbdt_spec(rng, batch=1024)
+    a, b = str(tmp_path / "staged"), str(tmp_path / "fused")
+    DatasetJob(FIT_FUSED, a, shard_edges=4096, seed=0,
+               mode="device_steps", features=spec).run()
+    DatasetJob(FIT_FUSED, b, shard_edges=4096, seed=0,
+               mode="device_steps", features=spec, fused=True).run()
+    assert _file_hashes(a) == _file_hashes(b)
+    assert _manifest_sans_executor(a) == _manifest_sans_executor(b)
+    assert ShardedGraphDataset(b).verify(deep=True) == []
+
+
+def test_fused_padded_tail_blocks(tmp_path, rng):
+    """No shard size divides the feature batch: every fused block run
+    ends in a padded tail (4096 % 1000, ragged final shard % 1000), and
+    the trimmed rows must still match the staged path byte-for-byte."""
+    spec = _gan_gbdt_spec(rng, batch=1000)
+    a, b = str(tmp_path / "staged"), str(tmp_path / "fused")
+    DatasetJob(FIT_FUSED, a, shard_edges=4096, seed=0, features=spec).run()
+    DatasetJob(FIT_FUSED, b, shard_edges=4096, seed=0, features=spec,
+               fused=True).run()
+    assert _file_hashes(a) == _file_hashes(b)
+
+
 def test_pipelined_overlap_reported(tmp_path):
     job = DatasetJob(FIT, str(tmp_path / "ds"), shard_edges=8192,
                      pipeline_depth=2)
