@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""Thin wrapper for ``python -m repro.analysis.lint`` that works from a
+fresh checkout without PYTHONPATH (mirrors the other scripts/ entry
+points).  All arguments pass through — see ``--help``."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

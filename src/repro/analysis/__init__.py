@@ -1,0 +1,23 @@
+"""Static analysis + runtime correctness harnesses for the repo's
+recurring bug classes.
+
+Seven PRs of history distilled into machine checks:
+
+* :mod:`repro.analysis.lint` — AST lint pass (``python -m
+  repro.analysis.lint``) with repo-specific checkers (DET01 hidden
+  constant-seed RNG, MUT01 shared-mutable defaults, OVF01 unguarded
+  node-id shifts, TRC01 uncached per-call ``jax.jit``, OBS01 hot-path
+  stages missing a tracer span, DEAD01 registered-but-never-exercised
+  sampler backends) and a checked-in baseline (``analysis/baseline.json``)
+  that freezes existing debt — new violations fail CI.
+* :mod:`repro.analysis.races` — a lightweight Eraser-style lockset race
+  detector: instrumentation wrappers for the executor/writer shared
+  state (stage timers, flush queue, jit caches, tracer aggregates)
+  record per-thread accesses with the held-lock set and report candidate
+  races; driven by a pipelined ``DatasetJob`` stress run.
+* :mod:`repro.analysis.retrace` — a jit-retrace counter harness proving
+  the steady-state trace count per runtime-compiled function stays at
+  the expected shape-bucket count across a multi-shard run (the
+  ``_fused_cache`` contract TRC01 checks statically).
+"""
+from repro.analysis.checkers import Violation, all_checkers  # noqa: F401

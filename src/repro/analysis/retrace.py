@@ -1,0 +1,172 @@
+"""Jit-retrace counter harness: prove the shape-bucket caches hold.
+
+TRC01 (the static rule) checks that runtime ``jax.jit`` sites sit behind
+a signature cache; this harness proves the *dynamic* half of the
+contract: over a multi-shard run, the number of traces of each
+runtime-compiled function equals the number of distinct shape signatures
+(``ChunkShardSource._fused_cache``'s keys), and a second pass over the
+same shards compiles **nothing** — steady state means zero retraces.
+
+Mechanism: ``RetraceRecorder`` temporarily replaces ``jax.jit`` with a
+wrapper that interposes a counting shim around the traced Python
+callable.  jax runs the Python function exactly once per trace
+(everything after that replays the compiled program), so the shim's hit
+count *is* the trace count.  Only jits created while the recorder is
+active are counted — module-level jits bound at import time are outside
+the steady-state contract and stay invisible.
+
+``python -m repro.analysis.retrace`` runs the fused chunk source over
+every shard of a small job twice and fails if the first pass traced more
+than one program per signature or the second pass traced at all.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+
+class RetraceRecorder:
+    """Context manager: while active, every ``jax.jit``-created function
+    counts its traces under the wrapped function's qualname."""
+
+    def __init__(self) -> None:
+        self.counts: Dict[str, int] = {}
+        self._mu = threading.Lock()
+        self._orig = None
+
+    def _bump(self, label: str) -> None:
+        with self._mu:
+            self.counts[label] = self.counts.get(label, 0) + 1
+
+    def total(self, substr: str = "") -> int:
+        with self._mu:
+            return sum(n for label, n in self.counts.items()
+                       if substr in label)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._mu:
+            return dict(self.counts)
+
+    def __enter__(self) -> "RetraceRecorder":
+        import jax
+
+        self._jax = jax
+        self._orig = orig_jit = jax.jit
+        rec = self
+
+        def counting_jit(fun=None, **kwargs):
+            if fun is None:          # decorator-with-options form
+                return functools.partial(counting_jit, **kwargs)
+            label = getattr(fun, "__qualname__", repr(fun))
+
+            @functools.wraps(fun)
+            def traced(*args, **kw):
+                rec._bump(label)
+                return fun(*args, **kw)
+
+            return orig_jit(traced, **kwargs)
+
+        jax.jit = counting_jit
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._jax.jit = self._orig
+
+
+# -- expected trace counts for the fused chunk source ------------------------
+
+def expected_fused_signatures(source, shards: Sequence[Any]
+                              ) -> Set[Tuple]:
+    """The signature set ``_generate_fused`` will key its cache with
+    over ``shards`` — computed independently from the plan, so the test
+    does not just read the cache back."""
+    sigs: Set[Tuple] = set()
+    wide = source.dtype.itemsize > 4
+    for rec in shards:
+        sizes = tuple(source.scheduler.chunk(i).n_edges
+                      for i in rec.chunk_indices)
+        _, b, n_blocks = source._feature_plan(rec.n_edges)
+        sigs.add((sizes, n_blocks, b, wide))
+    return sigs
+
+
+@dataclasses.dataclass
+class RetraceReport:
+    expected_signatures: int      # distinct shape buckets in the plan
+    first_pass_traces: int        # traces of the fused program, pass 1
+    steady_state_traces: int      # NEW traces (any function), pass 2
+    cache_entries: int            # len(source._fused_cache) afterwards
+    counts: Dict[str, int]        # per-qualname trace counts
+
+    @property
+    def ok(self) -> bool:
+        return (self.first_pass_traces == self.expected_signatures
+                and self.steady_state_traces == 0
+                and self.cache_entries == self.expected_signatures)
+
+    def render(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        return (f"{status}: {self.first_pass_traces} trace(s) for "
+                f"{self.expected_signatures} shape bucket(s), "
+                f"{self.steady_state_traces} steady-state retrace(s), "
+                f"{self.cache_entries} cache entr(y/ies)")
+
+
+def run_retrace(*, edges: int = 60_000, shard_edges: int = 8192,
+                seed: int = 0, backend: str = "xla") -> RetraceReport:
+    """Drive the fused ``ChunkShardSource`` over every shard twice and
+    audit trace counts against the plan's signature set."""
+    import numpy as np
+
+    from repro.core.structure import KroneckerFit
+    from repro.datastream.scheduler import ChunkScheduler
+    from repro.datastream.source import ChunkShardSource
+
+    fit = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=12, m=12,
+                       E=edges)
+    sched = ChunkScheduler(fit, shard_edges=shard_edges, seed=seed)
+    source = ChunkShardSource(sched, backend, np.int32, fused=True)
+    expected = expected_fused_signatures(source, sched.shards)
+
+    with RetraceRecorder() as rec:
+        for sh in sched.shards:
+            source.generate(sh)
+        first = rec.total("_build_fused")
+        baseline_all = rec.total()
+        for sh in sched.shards:          # steady state: zero new traces
+            source.generate(sh)
+        steady = rec.total() - baseline_all
+        counts = rec.snapshot()
+
+    return RetraceReport(expected_signatures=len(expected),
+                         first_pass_traces=first,
+                         steady_state_traces=steady,
+                         cache_entries=len(source._fused_cache),
+                         counts=counts)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.retrace",
+        description="jit-retrace audit of the fused shard source "
+                    "(CI gate: traces == shape buckets, zero retraces)")
+    ap.add_argument("--edges", type=int, default=60_000)
+    ap.add_argument("--shard-edges", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="xla")
+    args = ap.parse_args(argv)
+
+    report = run_retrace(edges=args.edges, shard_edges=args.shard_edges,
+                         seed=args.seed, backend=args.backend)
+    for label, n in sorted(report.counts.items()):
+        print(f"  {n:3d} trace(s)  {label}")
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -51,6 +51,20 @@ def _standardize(x, mu=None, sd=None):
     return (x - mu) / sd, mu, sd
 
 
+def _require_rng(rng: Optional[np.random.Generator],
+                 who: str) -> np.random.Generator:
+    """Alignment draws (key noise, tie-break jitter, permutation) must
+    come from a caller-derived stream — same discipline as
+    ``rmat.derive_thetas``: a hidden ``default_rng(0)`` here made every
+    shard of a streamed job replay one identical noise stream."""
+    if rng is None:
+        raise ValueError(
+            f"{who}: pass rng= (a np.random.Generator derived from the "
+            f"job seed) — alignment noise must not fall back to a "
+            f"hidden constant-seed stream")
+    return rng
+
+
 class GBDTAligner:
     """Per-column GBDT predictor + rank matching."""
 
@@ -334,7 +348,7 @@ class GBDTAligner:
         Inference cost: rank matching only ever reads the primary and
         secondary key columns, so only those (at most two) predictors are
         evaluated — not the full per-column stack of :meth:`predict`."""
-        rng = rng or np.random.default_rng(0)
+        rng = _require_rng(rng, "GBDTAligner.align")
         X = np.asarray(self._inputs(g), np.float32)
         n = min(len(X), len(cont_rows))
         prim, sec = self._key_order()
@@ -391,7 +405,7 @@ class RandomAligner:
         call-compatible with ``GBDTAligner.align``.  Truncates to the
         graph's edge/node count like the GBDT path, so the ablation can't
         return rows mismatched with the structure."""
-        rng = rng or np.random.default_rng(0)
+        rng = _require_rng(rng, "RandomAligner.align")
         n_target = g.n_edges if self.kind == "edge" else g.n_nodes
         n = min(len(cont_rows), n_target)
         perm = rng.permutation(len(cont_rows))[:n]

@@ -75,14 +75,16 @@ def _shutdown_pool() -> None:
 
 
 def _pool() -> ThreadPoolExecutor:
+    # Always take the lock: the lock-free fast-path read of _POOL was a
+    # benign-but-unprovable race (an uncontended acquire is nanoseconds
+    # next to a forest scan, so the double-checked idiom bought nothing).
     global _POOL
-    if _POOL is None:
-        with _POOL_LOCK:
-            if _POOL is None:
-                _POOL = ThreadPoolExecutor(
-                    max_workers=min(_CPU_FOREST_SHARDS, os.cpu_count() or 1))
-                atexit.register(_shutdown_pool)
-    return _POOL
+    with _POOL_LOCK:
+        if _POOL is None:
+            _POOL = ThreadPoolExecutor(
+                max_workers=min(_CPU_FOREST_SHARDS, os.cpu_count() or 1))
+            atexit.register(_shutdown_pool)
+        return _POOL
 
 
 def _forest_shards(n_rows: int, n_trees: int) -> int:

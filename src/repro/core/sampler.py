@@ -176,13 +176,21 @@ class PallasBitsBackend(EdgeSamplerBackend):
 class PallasPrngBackend(EdgeSamplerBackend):
     name = "pallas_prng"
 
+    def __init__(self, force_interpret: bool = False):
+        #: opt-in escape hatch for off-TPU smoke coverage: request pallas
+        #: interpret mode instead of refusing outright.  Lowering still
+        #: fails on hosts without interpret rules for ``pltpu.prng_*`` —
+        #: callers (the end-to-end test) map that to a skip with the
+        #: recorded reason.  Never the registered default.
+        self.force_interpret = bool(force_interpret)
+
     def available(self) -> bool:
         return self.why_unavailable() is None
 
     def why_unavailable(self) -> Optional[str]:
         if rs.pltpu is None:
             return "jax.experimental.pallas.tpu not importable"
-        if jax.default_backend() != "tpu":
+        if jax.default_backend() != "tpu" and not self.force_interpret:
             return ("pltpu.prng_* has no CPU/GPU interpret rule — "
                     "TPU-only backend")
         return None
@@ -203,7 +211,9 @@ class PallasPrngBackend(EdgeSamplerBackend):
         return rs.rmat_sample_prng(seed,
                                    jnp.asarray(thetas, jnp.float32),
                                    n, m, _pad_edges(n_edges, block),
-                                   block=block)
+                                   block=block,
+                                   interpret=self.force_interpret
+                                   and jax.default_backend() != "tpu")
 
 
 # ---------------------------------------------------------------------------

@@ -163,7 +163,12 @@ class ShardExecutor:
     def _feat_snapshot(self):
         if self.features is None:
             return (0.0, 0.0)
-        return (self.features.feat_s, self.features.align_s)
+        # feat_s/align_s are written by pool threads under the spec's
+        # lock; snapshot under the same lock so the pair is coherent
+        # (duck-typed stubs without a _lock read bare).
+        lock = getattr(self.features, "_lock", None)
+        with (lock if lock is not None else contextlib.nullcontext()):
+            return (self.features.feat_s, self.features.align_s)
 
     # -- serial baseline ---------------------------------------------------
     def _run_serial(self, records: Sequence[ShardRecord],

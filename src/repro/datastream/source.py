@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rmat
-from repro.core.descend import combine_ids, narrow_ids
+from repro.core.descend import check_id_capacity, combine_ids, narrow_ids
 from repro.core.sampler import get_backend
 from repro.core.structure import KroneckerFit
 from repro.datastream.scheduler import ChunkScheduler
@@ -301,6 +301,10 @@ class ChunkShardSource(ShardSource):
         if wide:
             spre = dpre = None
         else:
+            check_id_capacity(self.fit.n, jnp.int32,
+                              "_generate_fused: src prefix+level bits")
+            check_id_capacity(self.fit.m, jnp.int32,
+                              "_generate_fused: dst prefix+level bits")
             spre = jnp.asarray([ck.src_prefix << n_s for ck in chunks],
                                jnp.int32)
             dpre = jnp.asarray([ck.dst_prefix << m_s for ck in chunks],

@@ -274,11 +274,13 @@ class ShardWriter:
     def checkpoint(self) -> None:
         """Compact: persist the full manifest and truncate the journal
         (whose records it now subsumes)."""
-        self.manifest.save(self.out_dir)
-        path = os.path.join(self.out_dir, JOURNAL_NAME)
-        if os.path.exists(path):
-            os.truncate(path, 0)
-        self._since_checkpoint = 0
+        with self.tracer.span("write.checkpoint",
+                              shards=len(self.manifest.shards)):
+            self.manifest.save(self.out_dir)
+            path = os.path.join(self.out_dir, JOURNAL_NAME)
+            if os.path.exists(path):
+                os.truncate(path, 0)
+            self._since_checkpoint = 0
 
     def write_shard(self, shard_id: int,
                     arrays: Dict[str, np.ndarray]) -> ShardRecord:

@@ -1,0 +1,30 @@
+"""DET01 fixture: one hidden constant-seed RNG per flavour, plus clean
+decoys the checker must NOT flag."""
+import random
+
+import numpy as np
+
+_SALT = 0xFEA7
+
+
+def hidden_default_seed():
+    rng = np.random.default_rng(0)          # DET01: constant seed
+    return rng.normal()
+
+
+def legacy_global_sampler():
+    return np.random.uniform(0.0, 1.0)      # DET01: numpy global state
+
+
+def stdlib_global_state():
+    return random.randint(0, 7)             # DET01: stdlib global RNG
+
+
+def clean_threaded_rng(seed: int, shard_id: int):
+    # derived, non-constant seed list — the FeatureSpec discipline
+    rng = np.random.default_rng([seed, _SALT, shard_id])
+    return rng.integers(2 ** 63)
+
+
+def clean_caller_rng(rng: np.random.Generator):
+    return rng.normal()

@@ -1,0 +1,30 @@
+"""MUT01 fixture: shared-mutable defaults, plus clean decoys."""
+import dataclasses
+
+
+class RunConfig:
+    def __init__(self):
+        self.knobs = {}
+
+
+def accumulate(x, acc=[]):                  # MUT01: mutable literal
+    acc.append(x)
+    return acc
+
+
+def configure(run, cfg=RunConfig()):        # MUT01: one shared instance
+    cfg.knobs[run] = True
+    return cfg
+
+
+@dataclasses.dataclass
+class Job:
+    tags: dict = dataclasses.field(default_factory=dict)   # clean
+    frozen_tags: frozenset = frozenset()                   # clean
+    history: list = []                      # MUT01: dataclass literal
+
+
+def clean_none_default(x, acc=None):
+    acc = [] if acc is None else acc
+    acc.append(x)
+    return acc

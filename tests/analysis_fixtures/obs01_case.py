@@ -1,0 +1,28 @@
+"""OBS01 fixture (checked with a custom hot-surface map pointing at this
+file): a hot stage with no span, one that spans directly, one that
+reaches a span through a self-helper, and an abstract base."""
+
+
+class NoSpanSource:
+    def generate(self, rec):                # OBS01: no tracer.span
+        return {"src": rec, "dst": rec}
+
+
+class SpannedSource:
+    def generate(self, rec):                # clean: direct span
+        with self.tracer.span("struct", shard=rec):
+            return {"src": rec, "dst": rec}
+
+
+class DelegatingSource:
+    def generate(self, rec):                # clean: span via helper
+        return self._inner(rec)
+
+    def _inner(self, rec):
+        with self.tracer.span("struct.inner", shard=rec):
+            return {"src": rec, "dst": rec}
+
+
+class AbstractSource:
+    def generate(self, rec):                # clean: abstract
+        raise NotImplementedError

@@ -1,0 +1,21 @@
+"""OVF01 fixture: a node-id prefix shift without a capacity guard, plus
+a guarded clean decoy and an unrelated-shift decoy."""
+import numpy as np
+
+
+def check_id_capacity(bits, dtype, what):
+    if bits >= 8 * np.dtype(dtype).itemsize:
+        raise ValueError(what)
+
+
+def unguarded_prefix(src_prefix, n_s):
+    return src_prefix << n_s                # OVF01: no capacity guard
+
+
+def guarded_prefix(src_prefix, n_s, dtype):
+    check_id_capacity(n_s + 4, dtype, "guarded_prefix")
+    return src_prefix << n_s                # clean: guard in scope
+
+
+def clean_unrelated_shift(flags, k):
+    return flags << k                       # clean: not a node-id shift

@@ -1,0 +1,37 @@
+"""TRC01 fixture: a per-call jax.jit with no cache, plus every exempt
+pattern (module-level, __init__, .lower() probe, lru_cache, class with a
+signature cache)."""
+import functools
+
+import jax
+
+module_level = jax.jit(lambda x: x)         # clean: traced once at import
+
+
+def retraces_every_call(x):
+    fn = jax.jit(lambda y: y + 1)           # TRC01: no shape-bucket cache
+    return fn(x)
+
+
+def aot_probe(f, args):
+    return jax.jit(f).lower(*args)          # clean: AOT probe
+
+
+@functools.lru_cache(maxsize=None)
+def memoized_program(shape):
+    return jax.jit(lambda y: y.reshape(shape))   # clean: lru_cache
+
+
+class EngineWithCache:
+    def __init__(self):
+        self._program_cache = {}
+        self.step = jax.jit(self._step)     # clean: once per object
+
+    def _step(self, x):
+        return x
+
+    def program_for(self, sig):
+        fn = self._program_cache.get(sig)   # clean: cache evidence
+        if fn is None:
+            fn = self._program_cache[sig] = jax.jit(lambda y: y * 2)
+        return fn

@@ -89,7 +89,7 @@ def test_aligner_align_preserves_rows():
     schema = infer_schema(cont, cat)
     al = GBDTAligner(schema, AlignerConfig(gbdt=FAST), kind="edge").fit(
         g, cont, cat)
-    a_c, a_k = al.align(g, cont, cat)
+    a_c, a_k = al.align(g, cont, cat, np.random.default_rng(0))
     np.testing.assert_allclose(np.sort(a_c[:, 0]), np.sort(cont[:, 0]))
     assert sorted(a_k[:, 0].tolist()) == sorted(cat[: len(a_k), 0].tolist())
 
@@ -201,7 +201,7 @@ def test_aligner_fit_tiny_n_has_finite_quality():
                          AlignerConfig(gbdt=GBDTConfig(n_rounds=2))
                          ).fit(g, cont, cat)
         assert np.isfinite(al.col_quality).all(), n_edges
-        a_c, a_k = al.align(g, cont, cat)
+        a_c, a_k = al.align(g, cont, cat, np.random.default_rng(0))
         assert len(a_c) == n_edges and np.isfinite(a_c).all()
 
 
@@ -248,5 +248,5 @@ def test_node_aligner_runs():
     schema = infer_schema(cont, cat)
     al = GBDTAligner(schema, AlignerConfig(gbdt=GBDTConfig(n_rounds=5)),
                      kind="node").fit(g, cont, cat)
-    a_c, a_k = al.align(g, cont, cat)
+    a_c, a_k = al.align(g, cont, cat, np.random.default_rng(0))
     assert a_c.shape[0] == min(g.n_nodes, len(cont))

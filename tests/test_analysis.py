@@ -1,0 +1,250 @@
+"""repro.analysis: checker exact-fire behaviour on the fixture corpus,
+baseline freeze/suppress/stale round-trip, the repo's own lint
+cleanliness, and the lockset race-detector state machine."""
+import json
+import threading
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.checkers import (Dead01UnexercisedBackend,
+                                     Det01HiddenSeed,
+                                     Mut01SharedMutableDefault,
+                                     Obs01MissingSpan,
+                                     Ovf01UnguardedIdShift,
+                                     Trc01UncachedJit, Violation,
+                                     check_file)
+from repro.analysis.lint import main as lint_main, run_lint
+from repro.analysis.races import (MonitoredDict, RaceMonitor, watch_attrs)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+
+
+def _findings(name, checker):
+    path = FIXTURES / name
+    return check_file(path, name, [checker])
+
+
+def _lines_with(source_name, marker):
+    """1-based line numbers of fixture lines tagged ``# CODE: ...``."""
+    text = (FIXTURES / source_name).read_text()
+    return [i for i, ln in enumerate(text.splitlines(), 1) if marker in ln]
+
+
+# -- exact-fire per rule -----------------------------------------------------
+
+def test_det01_fires_on_each_flavour_and_spares_decoys():
+    got = _findings("det01_case.py", Det01HiddenSeed())
+    assert [v.code for v in got] == ["DET01"] * 3
+    assert [v.line for v in got] == _lines_with("det01_case.py", "# DET01")
+    assert all(v.render().startswith(f"det01_case.py:{v.line} DET01 ")
+               for v in got)
+
+
+def test_mut01_fires_on_literal_call_and_dataclass_defaults():
+    got = _findings("mut01_case.py", Mut01SharedMutableDefault())
+    assert [v.code for v in got] == ["MUT01"] * 3
+    assert sorted(v.line for v in got) == \
+        _lines_with("mut01_case.py", "# MUT01")
+    # one of each flavour: literal default, shared Config instance,
+    # dataclass field literal
+    msgs = " ".join(v.message for v in got)
+    assert "mutable literal" in msgs and "RunConfig(...)" in msgs
+    assert "dataclass Job field" in msgs
+
+
+def test_ovf01_fires_only_on_unguarded_id_shift():
+    got = _findings("ovf01_case.py", Ovf01UnguardedIdShift())
+    assert [(v.code, v.line) for v in got] == \
+        [("OVF01", _lines_with("ovf01_case.py", "# OVF01")[0])]
+    assert "unguarded_prefix" in got[0].message
+
+
+def test_trc01_fires_once_and_spares_all_exempt_patterns():
+    got = _findings("trc01_case.py", Trc01UncachedJit())
+    assert [(v.code, v.line) for v in got] == \
+        [("TRC01", _lines_with("trc01_case.py", "# TRC01")[0])]
+    assert "retraces_every_call" in got[0].message
+
+
+def test_obs01_fires_on_spanless_stage_with_custom_hot_surface():
+    checker = Obs01MissingSpan(hot=[("obs01_case.py", ("generate",))])
+    got = _findings("obs01_case.py", checker)
+    assert [(v.code, v.line) for v in got] == \
+        [("OBS01", _lines_with("obs01_case.py", "# OBS01")[0])]
+    assert "NoSpanSource.generate" in got[0].message
+
+
+def test_dead01_flags_untested_backend_and_accepts_quoted_name(tmp_path):
+    reg = tmp_path / "src" / "core" / "sampler.py"
+    reg.parent.mkdir(parents=True)
+    reg.write_text(
+        "class EdgeSamplerBackend:\n    name = '?'\n\n"
+        "class ABackend(EdgeSamplerBackend):\n    name = 'alpha'\n\n"
+        "class BBackend(EdgeSamplerBackend):\n    name = 'beta'\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    tests.joinpath("test_smoke.py").write_text(
+        "def test_alpha():\n    assert 'alpha'\n")
+    dead = Dead01UnexercisedBackend(registry_rel="src/core/sampler.py",
+                                    tests_rel="tests")
+    got = dead.check_repo(tmp_path)
+    assert [v.code for v in got] == ["DEAD01"]
+    assert "'beta'" in got[0].message and "alpha" not in got[0].message
+
+
+# -- baseline round-trip -----------------------------------------------------
+
+def test_baseline_freeze_suppress_and_stale_cycle(tmp_path):
+    v1 = Violation("a.py", 3, "DET01", "msg one")
+    v2 = Violation("b.py", 9, "MUT01", "msg two")
+    path = tmp_path / "baseline.json"
+    baseline_mod.save(path, [v1, v2])
+    base = baseline_mod.load(path)
+    # same findings (even at drifted lines) are fully suppressed
+    drifted = Violation("a.py", 30, "DET01", "msg one")
+    new, suppressed, stale = baseline_mod.apply([drifted, v2], base)
+    assert new == [] and len(suppressed) == 2 and stale == []
+    # a fresh finding is new; a paid-down finding goes stale
+    v3 = Violation("c.py", 1, "OVF01", "msg three")
+    new, suppressed, stale = baseline_mod.apply([v1, v3], base)
+    assert new == [v3]
+    assert stale == [("b.py", "MUT01", "msg two")]
+    # multiplicity: two identical findings need two baseline entries
+    baseline_mod.save(path, [v1, v1])
+    base = baseline_mod.load(path)
+    new, suppressed, _ = baseline_mod.apply([v1, v1, v1], base)
+    assert len(suppressed) == 2 and new == [v1]
+
+
+def test_lint_cli_gate_and_writeback(tmp_path, capsys):
+    target = tmp_path / "pkg"
+    target.mkdir()
+    target.joinpath("mod.py").write_text(
+        "import numpy as np\n\n"
+        "def f():\n    return np.random.default_rng(7)\n")
+    args = [str(target), "--root", str(tmp_path),
+            "--baseline", "bl.json"]
+    # gate fails while the finding is unbaselined
+    assert lint_main(args) == 1
+    out = capsys.readouterr().out
+    assert "DET01" in out and "FAIL:" in out
+    # freeze, then the same tree gates clean
+    assert lint_main(args + ["--write-baseline"]) == 0
+    assert lint_main(args) == 0
+    assert "ok:" in capsys.readouterr().out
+    # fixing the debt surfaces the stale entry (still exit 0)
+    target.joinpath("mod.py").write_text(
+        "import numpy as np\n\n"
+        "def f(rng):\n    return rng\n")
+    assert lint_main(args) == 0
+    assert "stale baseline entry" in capsys.readouterr().out
+    data = json.loads((tmp_path / "bl.json").read_text())
+    assert data["version"] == 1 and len(data["suppressions"]) == 1
+
+
+def test_repo_library_code_is_lint_clean_against_checked_in_baseline():
+    violations = run_lint(REPO)
+    base = baseline_mod.load(REPO / "analysis" / "baseline.json")
+    new, _, _ = baseline_mod.apply(violations, base)
+    assert new == [], "\n".join(v.render() for v in new)
+
+
+def test_rule_subset_and_unknown_rule(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    assert "DET01" in capsys.readouterr().out
+    assert lint_main(["--rules", "NOPE01"]) == 2
+
+
+# -- lockset race detector ---------------------------------------------------
+
+def test_lockset_reports_deterministic_unlocked_write_race():
+    mon = RaceMonitor()
+    b1, b2 = threading.Barrier(2), threading.Barrier(2)
+
+    def first():
+        mon.record("v", write=True)     # EXCLUSIVE(first)
+        b1.wait()
+        b2.wait()
+        mon.record("v", write=True)     # 2nd thread in shared-modified
+
+    def second():
+        b1.wait()
+        mon.record("v", write=True)     # shared-modified, empty lockset
+        b2.wait()
+
+    t1 = threading.Thread(target=first, name="racer-1")
+    t2 = threading.Thread(target=second, name="racer-2")
+    t1.start(); t2.start(); t1.join(); t2.join()
+    races = mon.races()
+    assert len(races) == 1
+    assert races[0].var == "v"
+    assert races[0].threads == ("racer-1", "racer-2")
+    assert "racer-1" in races[0].render()
+
+
+def test_lockset_consistent_locking_is_clean():
+    mon = RaceMonitor()
+    lock = mon.wrap_lock(threading.Lock(), "L")
+    start, done = threading.Barrier(3), threading.Barrier(3)
+
+    def worker():
+        start.wait()                # all threads alive while accessing
+        for _ in range(100):
+            with lock:
+                mon.record("v", write=True)
+        done.wait()
+
+    ts = [threading.Thread(target=worker) for _ in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert mon.races() == []
+    assert mon.state_of("v") == "shared-modified"
+
+
+def test_lockset_dead_thread_ownership_transfer():
+    # init-on-parent → worker writes → parent reads after join: the
+    # Thread.join happens-before edge, never a race
+    mon = RaceMonitor()
+    mon.record("v", write=True)             # parent init
+    t = threading.Thread(target=lambda: mon.record("v", write=True))
+    t.start(); t.join()
+    mon.record("v", write=False)            # parent reads post-join
+    assert mon.races() == []
+    assert mon.state_of("v") == "exclusive"
+
+
+def test_lockset_read_sharing_never_reports():
+    mon = RaceMonitor()
+    mon.record("v", write=True)
+    ts = [threading.Thread(
+        target=lambda: [mon.record("v", write=False) for _ in range(50)])
+        for _ in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert mon.races() == []
+
+
+def test_monitored_dict_and_watch_attrs_report_accesses():
+    mon = RaceMonitor()
+    d = MonitoredDict(mon, "D", {"a": 1})
+    d["b"] = 2
+    assert d.get("a") == 1 and "b" in d
+    d.pop("b")
+
+    class Obj:
+        pass
+
+    o = Obj()
+    o.x = 0
+    watch_attrs(mon, o, ("x",), "Obj")
+    o.x += 1                                # read + write, recorded
+    assert o.x == 1
+    assert mon.n_accesses >= 6
+    assert mon.state_of("D") == "exclusive"
+    assert mon.state_of("Obj.x") == "exclusive"
+    assert mon.races() == []

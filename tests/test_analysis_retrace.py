@@ -1,0 +1,39 @@
+"""Jit-retrace counting: the recorder itself, and the fused source's
+steady-state compile-count contract."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.retrace import RetraceRecorder, run_retrace
+
+
+def test_recorder_counts_traces_not_calls():
+    with RetraceRecorder() as rec:
+        fn = jax.jit(lambda x: x * 2)
+        for v in range(3):
+            fn(jnp.float32(v))          # same shape: one trace
+        fn(jnp.arange(4))               # new shape: second trace
+    (label, count), = rec.counts.items()
+    assert "<lambda>" in label and count == 2
+    # and the patch is gone afterwards
+    assert jax.jit(lambda x: x)(1) == 1
+
+
+def test_recorder_supports_decorator_with_options_form():
+    with RetraceRecorder() as rec:
+        @jax.jit
+        def f(x):
+            return x + 1
+
+        g = jax.jit(static_argnums=(1,))(lambda x, k: x + k)
+        assert f(jnp.int32(1)) == 2
+        assert g(jnp.int32(1), 2) == 3
+        assert g(jnp.int32(5), 2) == 7      # cached: no new trace
+    assert rec.total() == 2
+
+
+def test_fused_source_traces_once_per_shape_bucket():
+    report = run_retrace(edges=20_000, shard_edges=4096)
+    assert report.expected_signatures >= 2      # full + ragged shards
+    assert report.ok, report.render()
+    assert report.first_pass_traces == report.expected_signatures
+    assert report.steady_state_traces == 0

@@ -83,6 +83,45 @@ def test_pallas_prng_interpret_smoke():
     np.testing.assert_array_equal(d, np.asarray(d2.lo))
 
 
+def test_pallas_prng_forced_interpret_end_to_end():
+    """Exercise ``pallas_prng`` END-TO-END through the public
+    ``rmat.sample_graph`` entry point off-TPU: a
+    ``PallasPrngBackend(force_interpret=True)`` instance replaces the
+    registry entry so the full engine path (capacity guard → pad →
+    kernel → finalize) runs in pallas interpret mode.  Hosts without
+    interpret rules for ``pltpu.prng_*`` skip with the registry's
+    recorded gating reason — keeping the backend *exercised* (DEAD01)
+    wherever it can execute at all."""
+    from repro.kernels import rmat_sample as rs
+    if rs.pltpu is None:
+        pytest.skip("pallas_prng unavailable: pltpu not importable")
+    forced = sampler.PallasPrngBackend(force_interpret=True)
+    assert forced.why_unavailable() is None
+    fit = KroneckerFit(a=0.45, b=0.22, c=0.2, d=0.13, n=10, m=10, E=1024)
+    orig = sampler._REGISTRY["pallas_prng"]
+    sampler._REGISTRY["pallas_prng"] = forced
+    try:
+        try:
+            s, d = rmat.sample_graph(jax.random.PRNGKey(5), fit,
+                                     backend="pallas_prng")
+        except Exception as e:  # noqa: BLE001 — any lowering failure
+            why = orig.why_unavailable()
+            assert why is not None or jax.default_backend() == "tpu", \
+                f"default registry claims available but interpret died: {e}"
+            pytest.skip(f"pltpu PRNG interpret unsupported on this host "
+                        f"({why})")
+        s, d = np.asarray(s), np.asarray(d)
+        assert s.shape == d.shape == (fit.E,)
+        assert s.min() >= 0 and int(s.max()) < 2 ** fit.n
+        assert d.min() >= 0 and int(d.max()) < 2 ** fit.m
+        s2, d2 = rmat.sample_graph(jax.random.PRNGKey(5), fit,
+                                   backend="pallas_prng")
+        np.testing.assert_array_equal(s, np.asarray(s2))
+        np.testing.assert_array_equal(d, np.asarray(d2))
+    finally:
+        sampler._REGISTRY["pallas_prng"] = orig
+
+
 def test_xla_backend_is_the_sample_edges_stream():
     """The engine's xla backend reproduces the PRE-ENGINE
     ``rmat.sample_edges`` stream bit-for-bit (the invariant that lets
