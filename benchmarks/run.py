@@ -26,6 +26,7 @@ TABLES = [
     "feature_throughput",
     "executor_overlap",
     "fit_throughput",
+    "cluster_scaling",
 ]
 
 

@@ -15,6 +15,7 @@ import argparse
 import dataclasses
 import json
 import math
+import os
 import sys
 import time
 
@@ -48,6 +49,101 @@ def build_fit(args):
     if args.noise:
         fit = dataclasses.replace(fit, noise=args.noise)
     return fit
+
+
+def worker_path(path: str, worker_id: int) -> str:
+    """Namespace a per-run artifact path for one worker process:
+    ``trace.jsonl`` -> ``trace.w0.jsonl``."""
+    root, ext = os.path.splitext(path)
+    return f"{root}.w{int(worker_id)}{ext}"
+
+
+def worker_flags(args, worker_id: int, num_workers: int) -> list:
+    """Rebuild the CLI flags for one spawned worker stripe from the
+    coordinator's parsed args.  Everything byte-relevant (fit, seed,
+    shard size, mode, backend, dtype) passes through unchanged; the
+    stripe is selected by ``--num-workers/--worker-id``; per-worker
+    artifacts (trace, metrics) keep the parent's flag and are
+    namespaced by the worker itself."""
+    flags = ["--fit", args.fit, "--out", args.out,
+             "--shard-edges", args.shard_edges,
+             "--seed", str(args.seed), "--mode", args.mode,
+             "--num-workers", str(num_workers),
+             "--worker-id", str(worker_id),
+             "--pipeline-depth", str(args.pipeline_depth),
+             "--host-workers", str(args.host_workers)]
+    if args.edges:
+        flags += ["--edges", args.edges]
+    if args.k_pref is not None:
+        flags += ["--k-pref", str(args.k_pref)]
+    if args.noise:
+        flags += ["--noise", str(args.noise)]
+    if args.backend:
+        flags += ["--backend", args.backend]
+    if args.id_dtype:
+        flags += ["--id-dtype", args.id_dtype]
+    if args.max_shards is not None:
+        flags += ["--max-shards", str(args.max_shards)]
+    if args.fused:
+        flags += ["--fused"]
+    if args.serial:
+        flags += ["--serial"]
+    if args.trace is not None:
+        flags += (["--trace"] if args.trace == "auto"
+                  else ["--trace", args.trace])
+    if args.metrics_out:
+        flags += ["--metrics-out", args.metrics_out]
+    return flags
+
+
+def run_cluster(args, job) -> int:
+    """Coordinator mode: plan once, stripe across ``--num-workers``
+    spawned processes, merge journals into the one manifest."""
+    from repro.datastream import Manifest, ShardedGraphDataset
+    from repro.distributed.cluster import ClusterCoordinator, ClusterError
+
+    if args.resume and Manifest.exists(args.out):
+        job._load_validated()      # refuse resumes that change streams
+    else:
+        try:
+            job.plan(overwrite=args.resume)
+        except FileExistsError:
+            raise SystemExit(
+                f"error: {args.out} already holds a dataset — pass "
+                "--resume to continue it, or choose a different --out")
+    script = os.path.abspath(__file__)
+    coord = ClusterCoordinator(
+        args.out,
+        lambda w, W: [sys.executable, script] + worker_flags(args, w, W),
+        num_workers=args.num_workers,
+        log=lambda msg: print(f"cluster: {msg}", file=sys.stderr))
+    t0 = time.time()
+    try:
+        manifest = coord.run()
+    except ClusterError as e:
+        raise SystemExit(f"error: {e}")
+    dt = time.time() - t0
+    done = manifest.done_edges()
+    rounds = coord.report["rounds"]
+    print(f"cluster: materialized {len(manifest.done_ids())}/"
+          f"{len(manifest.shards)} shards, {done:,} edges in {dt:.1f}s "
+          f"({done / max(dt, 1e-9):,.0f} edges/s) across "
+          f"{args.num_workers} worker(s), {len(rounds)} round(s), "
+          f"{sum(r['deaths'] for r in rounds)} death(s)",
+          file=sys.stderr)
+    if args.trace is not None:
+        print(f"traces: {args.out}/trace.w*.jsonl "
+              f"(scripts/report_run.py trace.w0.jsonl trace.w1.jsonl ... "
+              f"for the merged stall report)", file=sys.stderr)
+    if args.verify or args.verify_deep:
+        ds = ShardedGraphDataset(args.out)
+        problems = ds.verify(deep=True)
+        if problems:
+            print("VERIFY FAILED:", *problems, sep="\n  ",
+                  file=sys.stderr)
+            return 1
+        print("verify: ok (deep, streamed crc)", file=sys.stderr)
+    return 0
 
 
 def main(argv=None) -> int:
@@ -87,6 +183,20 @@ def main(argv=None) -> int:
                     help="worker queues in the plan (see --worker)")
     ap.add_argument("--worker", type=int, default=None,
                     help="only materialize this worker's shard queue")
+    ap.add_argument("--num-workers", type=int, default=None,
+                    help="multi-PROCESS generation: spawn this many "
+                         "worker processes, each running one stripe of "
+                         "the plan, and merge their journals into the "
+                         "one manifest (repro.distributed.cluster). "
+                         "Output is byte-identical to the single-process "
+                         "run. With --worker-id, run one stripe instead "
+                         "of spawning")
+    ap.add_argument("--worker-id", type=int, default=None,
+                    help="run ONE stripe of an existing plan as this "
+                         "worker (0..K-1 of --num-workers K): appends "
+                         "completions to journal.w{k}.jsonl and never "
+                         "rewrites manifest.json — the building block "
+                         "the cluster coordinator spawns")
     ap.add_argument("--max-shards", type=int, default=None,
                     help="stop after N shards (incremental progress)")
     ap.add_argument("--resume", action="store_true",
@@ -132,8 +242,20 @@ def main(argv=None) -> int:
                     help="additionally capture a jax.profiler device "
                          "trace into DIR (TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
-
-    import os
+    if args.worker_id is not None and args.num_workers is None:
+        ap.error("--worker-id needs --num-workers (the stripe count "
+                 "the plan was made for)")
+    if args.num_workers is not None:
+        if args.num_workers < 1:
+            ap.error(f"--num-workers {args.num_workers} < 1")
+        if args.workers != 1 or args.worker is not None:
+            ap.error("--num-workers (multi-process) and "
+                     "--workers/--worker (in-process striping) are "
+                     "mutually exclusive")
+        if args.worker_id is not None \
+                and not 0 <= args.worker_id < args.num_workers:
+            ap.error(f"--worker-id {args.worker_id} outside "
+                     f"0..{args.num_workers - 1}")
 
     import numpy as np
 
@@ -144,17 +266,24 @@ def main(argv=None) -> int:
     fit = build_fit(args)
     tracer = Tracer()
     metrics = MetricsRegistry()
+    coordinator = args.num_workers is not None and args.worker_id is None
     trace_path = None
-    if args.trace is not None:
+    if args.trace is not None and not coordinator:
+        # the coordinator process generates nothing — its workers each
+        # record their own namespaced trace (trace.w{k}.jsonl)
         trace_path = (os.path.join(args.out, "trace.jsonl")
                       if args.trace == "auto" else args.trace)
+        if args.worker_id is not None:
+            trace_path = worker_path(trace_path, args.worker_id)
         os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
         tracer.add_sink(JsonlSink(trace_path))
     try:
         job = DatasetJob(fit, args.out,
                          shard_edges=parse_count(args.shard_edges),
                          seed=args.seed, k_pref=args.k_pref,
-                         num_workers=args.workers,
+                         num_workers=(args.num_workers
+                                      if args.num_workers is not None
+                                      else args.workers),
                          double_buffered=not args.serial, mode=args.mode,
                          backend=args.backend, id_dtype=args.id_dtype,
                          pipeline_depth=(0 if args.serial
@@ -171,16 +300,25 @@ def main(argv=None) -> int:
           f"pipeline_depth={job.pipeline_depth}, "
           f"host_workers={job.host_workers}, fused={job.fused}",
           file=sys.stderr)
+    if coordinator:
+        tracer.close()
+        return run_cluster(args, job)
     t0 = time.time()
     try:
         with jaxprof.trace(args.jax_profile):
-            manifest = job.run(resume=args.resume,
-                               max_shards=args.max_shards,
-                               worker=args.worker)
+            if args.worker_id is not None:
+                manifest = job.run_worker(args.worker_id,
+                                          max_shards=args.max_shards)
+            else:
+                manifest = job.run(resume=args.resume,
+                                   max_shards=args.max_shards,
+                                   worker=args.worker)
     except FileExistsError:
         raise SystemExit(f"error: {args.out} already holds a dataset — "
                          "pass --resume to continue it, or choose a "
                          "different --out")
+    except FileNotFoundError as e:
+        raise SystemExit(f"error: {e}")
     except ValueError as e:
         raise SystemExit(f"error: {e}")
     finally:
@@ -201,10 +339,17 @@ def main(argv=None) -> int:
         print(f"trace: {trace_path} (scripts/report_run.py for a "
               f"breakdown, --perfetto for a timeline)", file=sys.stderr)
     if args.metrics_out:
+        metrics_path = (worker_path(args.metrics_out, args.worker_id)
+                        if args.worker_id is not None
+                        else args.metrics_out)
         write_bench("generate_dataset",
                     {"timings": t, "registry": metrics.snapshot()},
-                    args.metrics_out)
-        print(f"metrics: {args.metrics_out}", file=sys.stderr)
+                    metrics_path)
+        print(f"metrics: {metrics_path}", file=sys.stderr)
+    if args.worker_id is not None:
+        # one stripe of a larger run: completeness, verification and the
+        # manifest compaction belong to the coordinator
+        return 0
     if manifest.is_complete():
         ds = ShardedGraphDataset(args.out)
         assert ds.total_edges == fit.E

@@ -38,12 +38,15 @@ from repro.datastream.service import DatasetJob
 from repro.datastream.source import (ChunkShardSource, DeviceStepShardSource,
                                      FeatureSpec, ShardSource)
 from repro.datastream.writer import (MANIFEST_NAME, AsyncFlushQueue, Manifest,
-                                     ShardRecord, ShardWriter, pump_chunks)
+                                     ShardRecord, ShardWriter, pump_chunks,
+                                     worker_journal_name,
+                                     worker_journal_paths)
 
 __all__ = [
     "ChunkScheduler", "ShardPlan", "auto_k_pref",
     "Manifest", "ShardRecord", "ShardWriter", "AsyncFlushQueue",
     "pump_chunks", "MANIFEST_NAME",
+    "worker_journal_name", "worker_journal_paths",
     "ShardedGraphDataset", "ShardBlock",
     "ShardSource", "ChunkShardSource", "DeviceStepShardSource",
     "ShardExecutor", "ExecutorStats",

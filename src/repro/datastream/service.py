@@ -41,7 +41,8 @@ from repro.datastream.reader import ShardedGraphDataset
 from repro.datastream.scheduler import ChunkScheduler
 from repro.datastream.source import (ChunkShardSource, DeviceStepShardSource,
                                      FeatureSpec, ShardSource)
-from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter)
+from repro.datastream.writer import (Manifest, ShardRecord, ShardWriter,
+                                     worker_journal_name)
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
 from repro.utils import accepts_kwarg
@@ -149,6 +150,7 @@ class DatasetJob:
             num_workers=self.num_workers, seed=self.seed)
         self.k_pref = self.scheduler.k_pref
         self._source: Optional[ShardSource] = None
+        self._by_worker: Optional[Dict[int, int]] = None
 
     # -- the shard source (structure generation) ---------------------------
     @property
@@ -271,43 +273,43 @@ class DatasetJob:
         return recs
 
     # -- run / resume ------------------------------------------------------
-    def run(self, resume: bool = False, max_shards: Optional[int] = None,
-            worker: Optional[int] = None) -> Manifest:
-        """Materialize pending shards through the executor.
-        ``max_shards`` bounds this call (simulating preemption /
-        incremental progress); ``worker`` restricts to one worker's queue
-        so N processes can run disjoint shard sets."""
-        if resume and Manifest.exists(self.out_dir):
-            manifest = self._load_validated()
-        else:
-            manifest = self.plan(overwrite=resume)
-        writer = ShardWriter(self.out_dir, manifest)
-        if resume:
+    def _assigned_worker(self, rec: ShardRecord) -> int:
+        """Worker-queue assignment of one shard under *this* job's
+        num_workers (chunks: the scheduler's greedy least-loaded packing;
+        device_steps: round-robin striping).  Deterministic, so N
+        processes configured identically always compute disjoint,
+        covering queues without coordination."""
+        if self.mode == "chunks":
+            if self._by_worker is None:
+                self._by_worker = {s.shard_id: s.worker
+                                   for s in self.scheduler.shards}
+            return self._by_worker.get(rec.shard_id, 0)
+        return rec.shard_id % self.num_workers
+
+    def _pending_records(self, manifest: Manifest, writer: ShardWriter,
+                         distrust: bool, worker: Optional[int],
+                         max_shards: Optional[int]) -> List[ShardRecord]:
+        if distrust:
             # distrust 'done' records whose files are missing/short
             for rec in manifest.shards:
                 if rec.status == "done" and \
                         not writer.shard_ok_on_disk(rec):
                     rec.status = "pending"
-        # worker queues come from *this* job's configuration, not the
-        # manifest: shard composition is num_workers-independent (chunks
-        # pack first-fit, device steps stripe), so a resume may re-stripe
-        # the remaining shards across a different --workers count — N
-        # processes with worker=0..N-1 always cover disjoint queues.
-        if worker is not None and not 0 <= worker < self.num_workers:
-            raise ValueError(f"worker={worker} outside this job's "
-                             f"0..{self.num_workers - 1} worker queues "
-                             f"(num_workers={self.num_workers})")
-        if self.mode == "chunks":
-            by_worker = {s.shard_id: s.worker
-                         for s in self.scheduler.shards}
-            assigned = lambda rec: by_worker.get(rec.shard_id, 0)  # noqa: E731
-        else:
-            assigned = lambda rec: rec.shard_id % self.num_workers  # noqa: E731
         records = [rec for rec in manifest.shards
                    if rec.status != "done"
-                   and (worker is None or assigned(rec) == worker)]
+                   and (worker is None
+                        or self._assigned_worker(rec) == worker)]
         if max_shards is not None:
             records = records[:max_shards]
+        return records
+
+    def _execute(self, records: List[ShardRecord],
+                 writer: ShardWriter, checkpoint: bool = True) -> None:
+        """Drive ``records`` through the staged executor; fold the run's
+        span-derived stage timings into ``self.timings``.  ``checkpoint``
+        compacts journal → manifest afterwards (workers of a
+        multi-process run skip it — their journal IS the durable
+        output and the coordinator owns the manifest)."""
         executor = ShardExecutor(
             self.source, writer, features=self.features, seed=self.seed,
             bipartite=self.fit.bipartite,
@@ -320,7 +322,8 @@ class DatasetJob:
         finally:
             # the journal already holds every committed shard; compacting
             # here (even after a failure) just folds it into the manifest
-            writer.checkpoint()
+            if checkpoint:
+                writer.checkpoint()
             self.timings = {
                 "gen_struct_s": executor.stats.struct_s,
                 "gen_feat_s": executor.stats.feat_s,
@@ -329,6 +332,73 @@ class DatasetJob:
                 "wall_s": executor.stats.wall_s,
                 "overlap": executor.stats.overlap,
                 "stall_s": executor.stats.stall_s}
+
+    def run(self, resume: bool = False, max_shards: Optional[int] = None,
+            worker: Optional[int] = None) -> Manifest:
+        """Materialize pending shards through the executor.
+        ``max_shards`` bounds this call (simulating preemption /
+        incremental progress); ``worker`` restricts to one worker's queue
+        so N processes can run disjoint shard sets."""
+        if resume and Manifest.exists(self.out_dir):
+            manifest = self._load_validated()
+        else:
+            manifest = self.plan(overwrite=resume)
+        writer = ShardWriter(self.out_dir, manifest)
+        # worker queues come from *this* job's configuration, not the
+        # manifest: shard composition is num_workers-independent (chunks
+        # pack first-fit, device steps stripe), so a resume may re-stripe
+        # the remaining shards across a different --workers count — N
+        # processes with worker=0..N-1 always cover disjoint queues.
+        if worker is not None and not 0 <= worker < self.num_workers:
+            raise ValueError(f"worker={worker} outside this job's "
+                             f"0..{self.num_workers - 1} worker queues "
+                             f"(num_workers={self.num_workers})")
+        records = self._pending_records(manifest, writer, distrust=resume,
+                                        worker=worker,
+                                        max_shards=max_shards)
+        self._execute(records, writer)
+        return manifest
+
+    def run_worker(self, worker_id: int,
+                   max_shards: Optional[int] = None) -> Manifest:
+        """Materialize one stripe of an **existing** plan — the building
+        block ``repro.distributed.cluster`` spawns, one process per
+        stripe.
+
+        Differences from ``run(resume=True, worker=k)``: the plan must
+        already exist (the coordinator plans exactly once), the
+        manifest's recorded ``num_workers`` must equal this job's (a
+        mismatch means the stripes of concurrently-running workers would
+        overlap or starve), completions append to the per-worker journal
+        ``journal.w{k}.jsonl`` instead of ``progress.jsonl``, and
+        ``manifest.json`` is never rewritten — the coordinator merges
+        worker journals into the authoritative manifest after the round.
+        """
+        worker_id = int(worker_id)
+        if not Manifest.exists(self.out_dir):
+            raise FileNotFoundError(
+                f"{self.out_dir} has no manifest — a worker stripe runs "
+                "an existing plan; the coordinator (or a plain run) "
+                "plans first")
+        manifest = self._load_validated()
+        if manifest.num_workers != self.num_workers:
+            raise ValueError(
+                f"plan at {self.out_dir} is striped for "
+                f"num_workers={manifest.num_workers} but this worker was "
+                f"launched with num_workers={self.num_workers} — "
+                f"concurrent stripes would overlap or starve; relaunch "
+                f"with the plan's worker count")
+        if not 0 <= worker_id < self.num_workers:
+            raise ValueError(
+                f"worker_id={worker_id} outside this plan's "
+                f"0..{self.num_workers - 1} stripes")
+        writer = ShardWriter(self.out_dir, manifest,
+                             journal_name=worker_journal_name(worker_id),
+                             compact=False)
+        records = self._pending_records(manifest, writer, distrust=True,
+                                        worker=worker_id,
+                                        max_shards=max_shards)
+        self._execute(records, writer, checkpoint=False)
         return manifest
 
     def resume(self, max_shards: Optional[int] = None,

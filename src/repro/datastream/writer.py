@@ -26,6 +26,7 @@ import dataclasses
 import json
 import os
 import queue
+import re
 import threading
 import time
 import zlib
@@ -35,11 +36,39 @@ import jax
 import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.sinks import iter_events
 from repro.obs.trace import NULL_TRACER
 
 MANIFEST_NAME = "manifest.json"
 JOURNAL_NAME = "progress.jsonl"
 FORMAT_VERSION = 1
+
+#: per-worker journal files of a multi-process run (see
+#: ``repro.distributed.cluster``): worker *k* appends its shard
+#: completions to ``journal.w{k}.jsonl`` so N processes never contend on
+#: one append stream; ``Manifest.load`` replays every worker journal
+#: alongside ``progress.jsonl`` and the coordinator folds them into the
+#: one authoritative manifest via ``Manifest.merge_worker_journals``.
+_WORKER_JOURNAL_RE = re.compile(r"^journal\.w(\d+)\.jsonl$")
+
+
+def worker_journal_name(worker_id: int) -> str:
+    return f"journal.w{int(worker_id)}.jsonl"
+
+
+def worker_journal_paths(out_dir: str) -> List[str]:
+    """Existing per-worker journals under ``out_dir``, sorted by worker
+    id (numeric, so w10 sorts after w2)."""
+    try:
+        names = os.listdir(out_dir)
+    except OSError:
+        return []
+    found = []
+    for name in names:
+        m = _WORKER_JOURNAL_RE.match(name)
+        if m:
+            found.append((int(m.group(1)), os.path.join(out_dir, name)))
+    return [p for _, p in sorted(found)]
 
 #: block size (rows) for streamed CRC of on-disk shards — deep verify
 #: touches one block at a time, so re-hashing a >RAM dataset stays
@@ -140,6 +169,21 @@ class ShardRecord:
         return cls(**d)
 
 
+def _iter_journal_records(path: str) -> Iterable["ShardRecord"]:
+    """Parse one journal file into ``ShardRecord``s with the
+    ``load_events`` partial-write policy: blank, torn and corrupt lines
+    (including a record whose JSON parses but whose fields don't form a
+    ShardRecord) are skipped, never raised on — a SIGKILL mid-append
+    must cost at most the record in flight."""
+    if not os.path.exists(path):
+        return
+    for d in iter_events(path):
+        try:
+            yield ShardRecord.from_json(d)
+        except TypeError:
+            continue        # valid JSON dict, but not a shard record
+
+
 @dataclasses.dataclass
 class Manifest:
     """Self-describing dataset index: fit provenance + shard records."""
@@ -196,22 +240,62 @@ class Manifest:
 
     def _replay_journal(self, out_dir: str) -> None:
         """Apply per-shard completion records journaled since the last
-        manifest compaction.  A torn final line (crash mid-append) is
-        skipped; replaying already-compacted records is idempotent."""
-        path = os.path.join(out_dir, JOURNAL_NAME)
-        if not os.path.exists(path):
-            return
-        with open(path, "rb") as f:
-            for line in f.read().decode(errors="replace").splitlines():
-                if not line.strip():
+        manifest compaction — from ``progress.jsonl`` and from every
+        per-worker ``journal.w{k}.jsonl`` a multi-process run left
+        behind.  Line parsing goes through ``repro.obs.sinks``'s
+        torn-line-tolerant iterator (the same partial-write policy as
+        ``JsonlSink.load_events``): a torn final line (crash mid-append)
+        is skipped, never raised on; replaying already-compacted records
+        is idempotent."""
+        for path in ([os.path.join(out_dir, JOURNAL_NAME)]
+                     + worker_journal_paths(out_dir)):
+            for rec in _iter_journal_records(path):
+                self._apply_record(rec)
+
+    def _apply_record(self, rec: "ShardRecord") -> bool:
+        """Adopt one journaled completion record if it names a planned
+        shard (id in range, stem matches — stale records from an
+        unrelated plan are ignored)."""
+        if 0 <= rec.shard_id < len(self.shards) and \
+                self.shards[rec.shard_id].stem == rec.stem:
+            self.shards[rec.shard_id] = rec
+            return True
+        return False
+
+    def merge_worker_journals(self, out_dir: str) -> Dict[str, Dict[str, int]]:
+        """Fold every per-worker journal into this manifest — the
+        coordinator's merge step after a round of worker processes.
+
+        Unlike the last-wins replay in ``load``, the merge is *strict*:
+        a shard committed by two **different** worker journals means the
+        stripes overlapped (two processes generated — and raced writing
+        — the same shard files), which is a coordination bug, so it
+        raises instead of silently keeping either record.  Re-reading a
+        journal whose records were already compacted into the manifest
+        is idempotent.  Returns per-journal stats
+        ``{journal_name: {"shards": n, "edges": n}}``.
+        """
+        owner: Dict[int, str] = {}
+        stats: Dict[str, Dict[str, int]] = {}
+        for path in worker_journal_paths(out_dir):
+            name = os.path.basename(path)
+            st = stats[name] = {"shards": 0, "edges": 0}
+            for rec in _iter_journal_records(path):
+                if not (0 <= rec.shard_id < len(self.shards)
+                        and self.shards[rec.shard_id].stem == rec.stem):
                     continue
-                try:
-                    rec = ShardRecord.from_json(json.loads(line))
-                except (ValueError, TypeError):
-                    continue      # torn/corrupt trailing record
-                if 0 <= rec.shard_id < len(self.shards) and \
-                        self.shards[rec.shard_id].stem == rec.stem:
+                prev = owner.get(rec.shard_id)
+                if prev is not None and prev != name:
+                    raise ValueError(
+                        f"shard {rec.shard_id} ({rec.stem}) was committed "
+                        f"by both {prev} and {name} — worker stripes "
+                        f"overlapped; refusing to merge")
+                owner[rec.shard_id] = name
+                if rec.status == "done":
                     self.shards[rec.shard_id] = rec
+                    st["shards"] += 1
+                    st["edges"] += rec.n_edges
+        return stats
 
     @staticmethod
     def exists(out_dir: str) -> bool:
@@ -246,7 +330,8 @@ class ShardWriter:
     COLUMNS = ("src", "dst", "cont", "cat")
 
     def __init__(self, out_dir: str, manifest: Manifest,
-                 checkpoint_every: int = 256, tracer=None, metrics=None):
+                 checkpoint_every: int = 256, tracer=None, metrics=None,
+                 journal_name: str = JOURNAL_NAME, compact: bool = True):
         self.out_dir = out_dir
         self.manifest = manifest
         self.checkpoint_every = checkpoint_every
@@ -255,8 +340,19 @@ class ShardWriter:
         # a private registry on first write.
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics
+        # multi-process worker mode: each worker appends to its own
+        # journal (journal.w{k}.jsonl) and NEVER rewrites manifest.json —
+        # the coordinator owns compaction, so concurrent workers can't
+        # race on the manifest.  compact=False makes checkpoint() a
+        # no-op; the journal is the worker's only durable output.
+        self.journal_name = str(journal_name)
+        self.compact = bool(compact)
         self._since_checkpoint = 0
         os.makedirs(out_dir, exist_ok=True)
+
+    @property
+    def journal_path(self) -> str:
+        return os.path.join(self.out_dir, self.journal_name)
 
     def _metrics(self) -> MetricsRegistry:
         if self.metrics is None:
@@ -264,22 +360,26 @@ class ShardWriter:
         return self.metrics
 
     def _journal(self, rec: ShardRecord) -> None:
-        path = os.path.join(self.out_dir, JOURNAL_NAME)
         with self.tracer.span("write.journal", shard=rec.shard_id):
-            with open(path, "ab") as f:
+            with open(self.journal_path, "ab") as f:
                 f.write(json.dumps(rec.to_json()).encode() + b"\n")
                 f.flush()
                 os.fsync(f.fileno())
 
     def checkpoint(self) -> None:
         """Compact: persist the full manifest and truncate the journal
-        (whose records it now subsumes)."""
+        (whose records it now subsumes).  A ``compact=False`` worker
+        writer no-ops — only the cluster coordinator may rewrite
+        ``manifest.json``, and truncating the worker journal would throw
+        away its durability."""
+        if not self.compact:
+            self._since_checkpoint = 0
+            return
         with self.tracer.span("write.checkpoint",
                               shards=len(self.manifest.shards)):
             self.manifest.save(self.out_dir)
-            path = os.path.join(self.out_dir, JOURNAL_NAME)
-            if os.path.exists(path):
-                os.truncate(path, 0)
+            if os.path.exists(self.journal_path):
+                os.truncate(self.journal_path, 0)
             self._since_checkpoint = 0
 
     def write_shard(self, shard_id: int,
